@@ -1,0 +1,56 @@
+"""Roofline headline rows for the benchmark CSV (reads dry-run JSONs).
+
+Full tables come from ``python benchmarks/roofline.py``; this emits the
+hillclimb cells' baseline vs optimized bounds so `benchmarks.run` output is
+self-contained.  Silently skipped when the dry-run has not been executed.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import csv_row  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "results", "dryrun")
+
+CELLS = [
+    ("qwen2-72b__train_4k__16x16", "baseline"),
+    ("qwen2-72b__train_4k__16x16__nosp_mb8_triangular", "optimized:layout"),
+    ("qwen2-72b__train_4k__16x16__megatron", "optimized:explicit-schedule"),
+    ("qwen3-moe-30b-a3b__prefill_32k__16x16", "baseline"),
+    ("qwen3-moe-30b-a3b__prefill_32k__16x16__nosp_mb8", "optimized"),
+    ("qwen2-72b__decode_32k__16x16", "baseline"),
+    ("qwen2-72b__decode_32k__16x16__kv_int8_no_zero", "optimized"),
+]
+
+
+def run() -> list:
+    rows = []
+    from cost_model import PEAK_FLOPS, ICI_BW
+    for tag, label in CELLS:
+        path = os.path.join(RESULTS, tag + ".json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            r = json.load(f)
+        coll = r["collectives"]["collective_bytes_per_device"]
+        rows.append({
+            "name": f"roofline/{tag}[{label}]",
+            "us": 0.0,
+            "derived": (f"compute_s={r.get('flops_per_device', 0)/PEAK_FLOPS:.3f} "
+                        f"collective_s={coll/ICI_BW:.3f} "
+                        f"mem_gib={(r['memory']['argument_bytes']+r['memory']['temp_bytes'])/2**30:.1f}"),
+        })
+    if not rows:
+        rows.append({"name": "roofline/dryrun_not_run", "us": 0.0,
+                     "derived": "run `python -m repro.launch.dryrun --all` first"})
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(csv_row(r["name"], r["us"], r["derived"]))

@@ -1,0 +1,39 @@
+"""Shared benchmark helpers: timing + workload generators."""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Iterable, List
+
+import numpy as np
+
+
+def time_us(fn: Callable, *args, warmup: int = 2, iters: int = 10) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    _block(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    _block(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _block(out):
+    import jax
+    for leaf in jax.tree.leaves(out):
+        if hasattr(leaf, "block_until_ready"):
+            leaf.block_until_ready()
+
+
+def zipf_block_stream(n_seqs: int, blocks_per_seq: int, n_accesses: int,
+                      a: float = 1.2, seed: int = 0) -> np.ndarray:
+    """(seq, block) access stream with zipfian block popularity — the
+    skewed reuse the paper's cost-tracking policy exploits."""
+    rng = np.random.Generator(np.random.Philox(seed))
+    seqs = rng.integers(0, n_seqs, n_accesses)
+    blocks = (rng.zipf(a, n_accesses) - 1) % blocks_per_seq
+    return np.stack([seqs, blocks], axis=1)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.2f},{derived}"

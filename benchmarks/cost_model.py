@@ -1,0 +1,115 @@
+"""Analytic FLOPs/bytes model per (arch x shape x mesh) for the roofline.
+
+MODEL_FLOPS follows the assignment: 6·N·D_tokens (train, dense) /
+6·N_active·D (MoE); forward-only kinds use the 2·N·D forward factor plus
+attention terms.  Attention FLOPs are added explicitly (they are not in
+N-based estimates).  These analytic numbers cross-check the
+trip-count-corrected HLO costs (hlo_analysis.py).
+
+Hardware constants (TPU v5e class, per assignment):
+    peak 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+from repro.configs.base import ArchConfig, ShapeCell
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+DTYPE_BYTES = 2  # bf16
+
+
+def attention_flops(cfg: ArchConfig, seq: int, batch: int,
+                    kind: str, causal_half: bool = False) -> float:
+    """q@k + p@v matmul flops for self-attention over the whole model."""
+    n_attn = sum(cfg.attn_on_layer(l) for l in range(cfg.num_layers))
+    if n_attn == 0:
+        return 0.0
+    hd = cfg.resolved_head_dim
+    H = cfg.num_heads
+    if kind == "decode":
+        # one query token against `seq` cached tokens
+        per_layer = 2 * 2 * batch * H * hd * seq
+        return per_layer * n_attn
+    per_layer = 2 * 2 * batch * H * hd * seq * seq
+    if causal_half:
+        per_layer /= 2
+    total = per_layer * n_attn
+    if kind == "train":
+        total *= 3  # fwd + bwd(2x)
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeCell) -> Dict[str, float]:
+    """Returns MODEL_FLOPS (6ND / 2ND style) and attention extras."""
+    N = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        tokens = B * S
+        base = 6.0 * N * tokens
+        attn = attention_flops(cfg, S, B, "train", causal_half=True)
+    elif shape.kind == "prefill":
+        tokens = B * S
+        base = 2.0 * N * tokens
+        attn = attention_flops(cfg, S, B, "prefill", causal_half=True)
+    else:  # decode: one token per sequence
+        tokens = B
+        base = 2.0 * N * tokens
+        attn = attention_flops(cfg, S, B, "decode")
+    return {"model_flops": base, "attention_flops": attn,
+            "total_flops": base + attn, "tokens": tokens}
+
+
+def hbm_bytes(cfg: ArchConfig, shape: ShapeCell) -> float:
+    """Dominant per-step HBM traffic (global): weights + KV reads."""
+    N = cfg.active_param_count()
+    B, S = shape.global_batch, shape.seq_len
+    n_attn = sum(cfg.attn_on_layer(l) for l in range(cfg.num_layers))
+    kv_per_token = n_attn * cfg.num_kv_heads * cfg.resolved_head_dim * 2
+    if shape.kind == "decode":
+        # weights once + the whole KV cache once per decode step
+        return (N * DTYPE_BYTES
+                + B * S * kv_per_token * DTYPE_BYTES)
+    # train/prefill: weights (+grad/opt traffic for train) + activations
+    act = B * S * cfg.d_model * DTYPE_BYTES * cfg.num_layers
+    w_passes = 3 if shape.kind == "train" else 1
+    return N * DTYPE_BYTES * w_passes + act
+
+
+def roofline_terms(cfg: ArchConfig, shape: ShapeCell, n_chips: int,
+                   hlo_flops_per_dev: float, hlo_bytes_per_dev: float,
+                   collective_bytes_per_dev: float) -> Dict[str, float]:
+    """Three roofline terms in seconds + bottleneck + useful-flops ratio.
+
+    The memory term is reported twice: ``memory_s_ub`` from the HLO op-level
+    operand/result bytes (an upper bound: a value re-read by k consumers is
+    charged k times, as in XLA's own bytes-accessed) and ``memory_s`` from
+    the analytic traffic model (weights + KV + activations once — the lower
+    bound a perfectly-fused TPU program approaches).  The bottleneck is
+    picked with the analytic term; both appear in the table.
+    """
+    compute_s = hlo_flops_per_dev / PEAK_FLOPS
+    memory_ub_s = hlo_bytes_per_dev / HBM_BW
+    memory_s = hbm_bytes(cfg, shape) / n_chips / HBM_BW
+    collective_s = collective_bytes_per_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    terms["memory_s_ub"] = memory_ub_s
+    mf = model_flops(cfg, shape)
+    useful = mf["total_flops"] / n_chips
+    return {
+        **terms,
+        "dominant": dominant,
+        "bound_s": terms[dominant],
+        "model_flops_global": mf["total_flops"],
+        "model_flops_per_dev": useful,
+        "hlo_flops_per_dev": hlo_flops_per_dev,
+        "useful_flops_ratio": (useful / hlo_flops_per_dev
+                               if hlo_flops_per_dev else 0.0),
+        "roofline_fraction": (useful / PEAK_FLOPS) / max(
+            terms[dominant], 1e-30),
+    }

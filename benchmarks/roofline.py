@@ -1,0 +1,105 @@
+"""Roofline report: three terms per (arch x shape x mesh) from the dry-run.
+
+Reads benchmarks/results/dryrun/*.json (written by repro.launch.dryrun),
+computes
+    compute term    = flops_per_device / peak
+    memory term     = bytes_per_device / HBM bw
+    collective term = collective_bytes_per_device / ICI bw
+plus MODEL_FLOPS (6·N_active·D), the useful-flops ratio, the dominant
+bottleneck, and the roofline fraction (useful-compute-time / bound-time).
+
+Usage:
+    python benchmarks/roofline.py [--mesh 16x16] [--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                "..", "src"))
+
+from cost_model import roofline_terms, PEAK_FLOPS, HBM_BW, ICI_BW  # noqa
+from repro.configs import get_config, shape_cell  # noqa
+
+RESULTS = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       "results", "dryrun")
+
+
+def load_cells(mesh: str = None, variant: str = "baseline"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        if r.get("skipped"):
+            rows.append(r)
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        if r.get("perf_variant", "baseline") != variant:
+            continue
+        cfg = get_config(r["arch"])
+        shape = shape_cell(r["shape"])
+        n_chips = 512 if r["mesh"] == "2x16x16" else 256
+        terms = roofline_terms(
+            cfg, shape, n_chips,
+            hlo_flops_per_dev=r.get("flops_per_device",
+                                    r["flops_per_device_raw"]),
+            hlo_bytes_per_dev=r.get("bytes_per_device",
+                                    r["bytes_per_device_raw"]),
+            collective_bytes_per_dev=r["collectives"][
+                "collective_bytes_per_device"])
+        r["roofline"] = terms
+        rows.append(r)
+    return rows
+
+
+def fmt_table(rows, markdown=False):
+    hdr = ["cell", "mesh", "compute_s", "memory_s", "memory_s_ub",
+           "collective_s", "dominant", "useful_ratio", "roofline_frac",
+           "hbm_fit"]
+    out = []
+    if markdown:
+        out.append("| " + " | ".join(hdr) + " |")
+        out.append("|" + "---|" * len(hdr))
+    else:
+        out.append(",".join(hdr))
+    for r in rows:
+        if r.get("skipped"):
+            line = [f"{r['arch']}/{r['shape']}", r.get("mesh", "-"),
+                    "SKIP", "", "", "",
+                    r.get("skip_reason", "")[:40], "", "", ""]
+        else:
+            t = r["roofline"]
+            mem = r["memory"]
+            per_dev_gib = (mem["argument_bytes"] + mem["temp_bytes"]) / 2**30
+            line = [f"{r['arch']}/{r['shape']}", r["mesh"],
+                    f"{t['compute_s']:.3e}", f"{t['memory_s']:.3e}",
+                    f"{t['memory_s_ub']:.3e}",
+                    f"{t['collective_s']:.3e}", t["dominant"],
+                    f"{t['useful_flops_ratio']:.2f}",
+                    f"{t['roofline_fraction']:.3f}",
+                    f"{per_dev_gib:.1f}GiB"]
+        if markdown:
+            out.append("| " + " | ".join(str(x) for x in line) + " |")
+        else:
+            out.append(",".join(str(x) for x in line))
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default=None)
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load_cells(args.mesh, args.variant)
+    print(fmt_table(rows, args.markdown))
+
+
+if __name__ == "__main__":
+    main()

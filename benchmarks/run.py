@@ -1,0 +1,47 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV.  Roofline terms come from
+``benchmarks/roofline.py`` (reads the dry-run JSONs); everything here runs
+live on CPU with the real mechanisms at reduced scale.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import traceback
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+
+from common import csv_row  # noqa: E402
+
+MODULES = [
+    "bench_structure_size",     # Fig. 13
+    "bench_restrictive_only",   # Fig. 9
+    "bench_translation",        # Figs. 18/19/20
+    "bench_tar_sf_locality",    # Fig. 23
+    "bench_reuse",              # Figs. 24/26
+    "bench_restseg_size",       # Fig. 27
+    "bench_hash_functions",     # Fig. 30
+    "bench_non_bound",          # §8.3.7
+    "bench_roofline_summary",   # §Roofline headline (from dry-run JSONs)
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = []
+    for mod_name in MODULES:
+        try:
+            mod = __import__(mod_name)
+            for r in mod.run():
+                print(csv_row(r["name"], r["us"], r["derived"]), flush=True)
+        except Exception:
+            failures.append(mod_name)
+            traceback.print_exc()
+    if failures:
+        print(f"FAILED: {failures}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Architecture registry: --arch <id> resolves here."""
+from .base import (ArchConfig, ResolvedDims, ShapeCell, SHAPES, shape_cell,
+                   resolve, reduced, cell_applicable)
+
+from .qwen3_moe_30b_a3b import CONFIG as _qwen3_moe
+from .llama4_scout_17b_a16e import CONFIG as _llama4_scout
+from .paligemma_3b import CONFIG as _paligemma
+from .whisper_medium import CONFIG as _whisper
+from .granite_3_8b import CONFIG as _granite3
+from .qwen2_5_14b import CONFIG as _qwen25_14b
+from .qwen2_72b import CONFIG as _qwen2_72b
+from .granite_8b import CONFIG as _granite8b
+from .jamba_1_5_large_398b import CONFIG as _jamba
+from .mamba2_130m import CONFIG as _mamba2
+
+ARCHS = {c.name: c for c in (
+    _qwen3_moe, _llama4_scout, _paligemma, _whisper, _granite3,
+    _qwen25_14b, _qwen2_72b, _granite8b, _jamba, _mamba2,
+)}
+
+
+def get_config(name: str) -> ArchConfig:
+    try:
+        return ARCHS[name]
+    except KeyError:
+        raise KeyError(f"unknown arch {name!r}; options: {sorted(ARCHS)}")
+
+
+def list_archs():
+    return sorted(ARCHS)
+
+
+__all__ = ["ArchConfig", "ResolvedDims", "ShapeCell", "SHAPES", "shape_cell",
+           "resolve", "reduced", "cell_applicable", "ARCHS", "get_config",
+           "list_archs"]

@@ -1,0 +1,24 @@
+"""whisper-medium [arXiv:2212.04356; unverified] — enc-dec, conv frontend stub.
+
+24 encoder + 24 decoder layers.  The conv/log-mel frontend is a STUB:
+``input_specs()`` provides (B, 1500, d_model) precomputed frame embeddings
+fed to the encoder.  Decode cells exercise the decoder with a paged
+self-attention KV cache + fixed cross-attention KV."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="whisper-medium",
+    family="audio",
+    num_layers=24,           # decoder layers
+    encoder_layers=24,
+    is_encoder_decoder=True,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,         # full MHA
+    d_ff=4096,
+    vocab_size=51865,
+    qkv_bias=True,
+    frontend="audio",
+    frontend_tokens=1500,
+    source="arXiv:2212.04356; unverified",
+)

@@ -1,0 +1,23 @@
+"""Utopia core: hybrid restrictive/flexible KV-block translation."""
+from .segments import HybridConfig, RestSegConfig, FlexSegConfig, pool_slots_for
+from .hashes import HASHES, get_hash
+from .tar_sf import RestSegState, RSWResult, init_restseg, rsw, insert, remove
+from .flex_table import FlexTable, RadixTable, RadixBuilder, init_flex_table
+from .translate import (TranslationState, TranslateResult, translate,
+                        translate_radix, translate_ech, translate_pom)
+from .policies import SRRIP, CostTracker, CostTrackerConfig
+from .kv_manager import HybridKVManager, BlockInfo, PoolExhausted, REST, FLEX, SWAP
+from .ech import ElasticCuckooTable, ECHState
+from .pom_tlb import POMTLB, POMTLBState
+
+__all__ = [
+    "HybridConfig", "RestSegConfig", "FlexSegConfig", "pool_slots_for",
+    "HASHES", "get_hash",
+    "RestSegState", "RSWResult", "init_restseg", "rsw", "insert", "remove",
+    "FlexTable", "RadixTable", "RadixBuilder", "init_flex_table",
+    "TranslationState", "TranslateResult", "translate",
+    "translate_radix", "translate_ech", "translate_pom",
+    "SRRIP", "CostTracker", "CostTrackerConfig",
+    "HybridKVManager", "BlockInfo", "PoolExhausted", "REST", "FLEX", "SWAP",
+    "ElasticCuckooTable", "ECHState", "POMTLB", "POMTLBState",
+]

@@ -1,0 +1,125 @@
+"""FlexSeg translation structures: flat block table + radix-walk baseline.
+
+Two device-side representations of the flexible mapping:
+
+* ``FlexTable``  — flat (max_seqs, max_blocks_per_seq) table, one gather per
+  translation.  This is what the production serve path uses for FlexSeg
+  blocks (the vLLM-style block table).
+* ``RadixTable`` — 4-level radix tree over the vpn, requiring four *serial*
+  dependent gathers per translation.  This reproduces the paper's baseline
+  page-table walk (PTW) cost structure for the benchmarks: the serial
+  dependency chain is real in the lowered HLO (each gather's index depends
+  on the previous gather's result).
+"""
+from __future__ import annotations
+
+from typing import List, NamedTuple, Tuple
+
+import numpy as np
+import jax.numpy as jnp
+
+
+class FlexTable(NamedTuple):
+    table: jnp.ndarray  # (max_seqs, max_blocks_per_seq) int32 slot, -1 unmapped
+
+    def lookup_vpn(self, vpn: jnp.ndarray, max_blocks_per_seq: int):
+        seq = vpn // max_blocks_per_seq
+        blk = vpn % max_blocks_per_seq
+        slot = self.table[seq, blk]
+        return slot, slot >= 0
+
+
+def init_flex_table(max_seqs: int, max_blocks_per_seq: int) -> FlexTable:
+    return FlexTable(table=-jnp.ones((max_seqs, max_blocks_per_seq), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Radix ("x86-64 page-table") baseline
+# ---------------------------------------------------------------------------
+
+class RadixTable(NamedTuple):
+    """Multi-level radix table stored as per-level node pools.
+
+    ``levels[i]`` has shape (n_nodes_i, fanout) int32.  An entry at level i
+    holds the node index for level i+1 (or -1).  The leaf level holds the
+    physical slot (or -1).  A walk is ``levels`` dependent gathers — the
+    serial pointer chase of the paper's Fig. 1.
+    """
+    levels: Tuple[jnp.ndarray, ...]
+    fanout: int
+
+    @property
+    def num_levels(self) -> int:
+        return len(self.levels)
+
+    def walk(self, vpn: jnp.ndarray):
+        """Serial radix walk.  Returns (slot, hit, accesses)."""
+        L = self.num_levels
+        f = self.fanout
+        # vpn digit for level 0 is the most significant
+        node = jnp.zeros_like(vpn)
+        ok = jnp.ones(vpn.shape, bool)
+        accesses = jnp.zeros(vpn.shape, jnp.int32)
+        for i in range(L):
+            shift = f ** (L - 1 - i)
+            digit = (vpn // shift) % f
+            entry = self.levels[i][jnp.maximum(node, 0), digit]
+            accesses = accesses + jnp.where(ok, 1, 0)
+            ok = ok & (entry >= 0)
+            node = entry
+        slot = jnp.where(ok, node, -1)
+        return slot.astype(jnp.int32), ok, accesses
+
+
+class RadixBuilder:
+    """Host-side (numpy) incremental builder mirroring ``RadixTable``."""
+
+    def __init__(self, num_levels: int = 4, fanout: int = 8):
+        self.num_levels = num_levels
+        self.fanout = fanout
+        self.levels: List[np.ndarray] = [
+            -np.ones((1, fanout), np.int32)  # root pre-allocated
+        ] + [
+            -np.ones((0, fanout), np.int32) for _ in range(num_levels - 1)
+        ]
+
+    def _alloc_node(self, level: int) -> int:
+        arr = self.levels[level]
+        self.levels[level] = np.concatenate(
+            [arr, -np.ones((1, self.fanout), np.int32)], axis=0)
+        return arr.shape[0]
+
+    def map(self, vpn: int, slot: int) -> None:
+        node = 0
+        for i in range(self.num_levels):
+            shift = self.fanout ** (self.num_levels - 1 - i)
+            digit = (vpn // shift) % self.fanout
+            if i == self.num_levels - 1:
+                self.levels[i][node, digit] = slot
+                return
+            nxt = self.levels[i][node, digit]
+            if nxt < 0:
+                nxt = self._alloc_node(i + 1)
+                self.levels[i][node, digit] = nxt
+            node = nxt
+
+    def unmap(self, vpn: int) -> None:
+        node = 0
+        for i in range(self.num_levels):
+            shift = self.fanout ** (self.num_levels - 1 - i)
+            digit = (vpn // shift) % self.fanout
+            if i == self.num_levels - 1:
+                self.levels[i][node, digit] = -1
+                return
+            node = self.levels[i][node, digit]
+            if node < 0:
+                return
+
+    def table_bytes(self, entry_bytes: int = 4) -> int:
+        return sum(a.size * entry_bytes for a in self.levels)
+
+    def device_table(self) -> RadixTable:
+        return RadixTable(
+            levels=tuple(jnp.asarray(a) for a in self.levels),
+            fanout=self.fanout,
+        )

@@ -1,0 +1,392 @@
+"""Hybrid paged-KV manager: the OS of the Utopia adaptation (paper §5.5/5.6).
+
+Host-side authority over the physical KV-block pool.  Owns:
+
+* the RestSeg (set-associative region): numpy TAR/SF mirrors + SRRIP rrpv,
+* the FlexSeg (flexible region): free list + flat block table + refcounts
+  (refcounts implement prefix sharing — the paper's "data sharing across
+  processes", which is exactly what the restrictive mapping cannot do),
+* allocation (page-fault-based: straight into the RestSeg),
+* eviction (SRRIP within a set; evictee *migrates* to the FlexSeg — never
+  dropped while flexible space remains, the paper's anti-swap argument),
+* promotion (CostTracker: blocks with frequent+costly flexible walks move
+  into the RestSeg),
+* the swap analogue: when the whole pool is exhausted (or in
+  ``restrictive_only`` mode, when a set conflicts with no flexible
+  fallback), the block is evicted to "swap" = must be recomputed/host-
+  fetched.  ``stats["swap_out"/"swap_in"]`` reproduce Fig. 9.
+
+Device state (``device_state()``) is the packed TranslationState consumed by
+``serve_step`` and the Pallas kernels.  Migration of KV *data* between pool
+slots is performed on device by ``serve/engine.py`` (gather/scatter); the
+manager emits the (src, dst) slot copy list for each step, the analogue of
+the paper's DMA-driven page copy (§5.6, Fig. 16).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from .segments import HybridConfig
+from .hashes import get_hash
+from .policies import SRRIP, CostTracker, CostTrackerConfig
+
+REST = 0
+FLEX = 1
+SWAP = 2
+
+
+@dataclasses.dataclass
+class BlockInfo:
+    vpn: int
+    seg: int           # REST / FLEX / SWAP
+    slot: int          # global pool slot (-1 if swapped)
+    refcount: int = 1  # >1 only in FlexSeg (sharing)
+    reuse: int = 0     # RSW/table hits while resident (Fig. 26)
+    writable: bool = True
+
+
+class PoolExhausted(RuntimeError):
+    pass
+
+
+class HybridKVManager:
+    def __init__(self, cfg: HybridConfig):
+        self.cfg = cfg
+        self.hash = get_hash(cfg.hash_name)
+        ns, assoc = cfg.num_sets, cfg.assoc
+        # RestSeg mirrors
+        self.tar = np.zeros((ns, assoc), np.int32)   # vpn+1, 0 empty
+        self.sf = np.zeros(ns, np.int32)
+        self.srrip = SRRIP(ns, assoc)
+        # FlexSeg
+        self.flex_free: List[int] = list(
+            range(cfg.rest_slots, cfg.total_slots))
+        self.flex_table = -np.ones(
+            (cfg.max_seqs, cfg.max_blocks_per_seq), np.int32)
+        # global views
+        self.blocks: Dict[int, BlockInfo] = {}       # vpn -> info
+        self.slot_refcount: Dict[int, int] = defaultdict(int)  # flex sharing
+        self.slot_owner = -np.ones(cfg.total_slots, np.int64)  # slot -> vpn
+        self.seq_lengths: Dict[int, int] = {}        # seq_slot -> tokens
+        self._free_seq_slots = list(range(cfg.max_seqs - 1, -1, -1))
+        self._seq_ids: Dict[int, int] = {}           # user seq id -> seq slot
+        self.tracker = CostTracker(
+            cfg.vpn_space,
+            CostTrackerConfig(freq_threshold=cfg.promote_freq_threshold,
+                              cost_threshold=cfg.promote_cost_threshold))
+        self.pending_copies: List[Tuple[int, int]] = []  # (src_slot, dst_slot)
+        self.stats = defaultdict(int)
+        self.reuse_histogram = defaultdict(int)      # reuse level at eviction
+
+    # ----------------------------------------------------------- sequences
+    def register_sequence(self, seq_id: int) -> int:
+        if seq_id in self._seq_ids:
+            return self._seq_ids[seq_id]
+        if not self._free_seq_slots:
+            raise PoolExhausted("out of sequence slots")
+        s = self._free_seq_slots.pop()
+        self._seq_ids[seq_id] = s
+        self.seq_lengths[s] = 0
+        return s
+
+    def seq_slot(self, seq_id: int) -> int:
+        return self._seq_ids[seq_id]
+
+    def free_sequence(self, seq_id: int) -> None:
+        s = self._seq_ids.pop(seq_id)
+        for b in range(self.cfg.max_blocks_per_seq):
+            vpn = s * self.cfg.max_blocks_per_seq + b
+            if vpn in self.blocks:
+                self._release(vpn)
+        del self.seq_lengths[s]
+        self._free_seq_slots.append(s)
+
+    # ---------------------------------------------------------- allocation
+    def allocate_block(self, seq_id: int, block_idx: int,
+                       writable: bool = True) -> BlockInfo:
+        """Page-fault-based allocation (§5.5): RestSeg first."""
+        s = self.seq_slot(seq_id)
+        vpn = self.cfg.vpn(s, block_idx)
+        if vpn in self.blocks:
+            return self.blocks[vpn]
+        self.stats["faults"] += 1
+        if self.cfg.mode != "flexible_only":
+            info = self._try_rest_alloc(vpn, writable)
+            if info is not None:
+                return info
+            if self.cfg.mode == "restrictive_only":
+                # no flexible fallback: the conflicting block goes to swap
+                self.stats["swap_out"] += 1
+                info = BlockInfo(vpn=vpn, seg=SWAP, slot=-1, writable=writable)
+                self.blocks[vpn] = info
+                return info
+        return self._flex_alloc(vpn, writable)
+
+    def _try_rest_alloc(self, vpn: int, writable: bool,
+                        allow_evict: Optional[bool] = None) -> Optional[BlockInfo]:
+        st = self.hash(vpn, self.cfg.num_sets)
+        row = self.tar[st]
+        empty = np.nonzero(row == 0)[0]
+        if empty.size:
+            return self._rest_place(vpn, st, int(empty[0]), writable)
+        if allow_evict is None:
+            allow_evict = self.cfg.alloc_evicts
+        if not allow_evict:
+            return None
+        if self.cfg.mode == "restrictive_only":
+            victim_way = self.srrip.victim(st, row != 0)
+            self._rest_evict(st, victim_way, to_swap=True)
+            return self._rest_place(vpn, st, victim_way, writable)
+        if not self.flex_free:
+            return None  # nowhere to migrate the victim
+        victim_way = self.srrip.victim(st, row != 0)
+        self._rest_evict(st, victim_way, to_swap=False)
+        return self._rest_place(vpn, st, victim_way, writable)
+
+    def _rest_place(self, vpn: int, st: int, way: int, writable: bool) -> BlockInfo:
+        self.tar[st, way] = vpn + 1
+        self.sf[st] += 1
+        self.srrip.on_insert(st, way)
+        slot = st * self.cfg.assoc + way
+        info = BlockInfo(vpn=vpn, seg=REST, slot=slot, writable=writable)
+        self.blocks[vpn] = info
+        self.slot_owner[slot] = vpn
+        self.stats["rest_allocs"] += 1
+        return info
+
+    def _flex_alloc(self, vpn: int, writable: bool) -> BlockInfo:
+        if not self.flex_free:
+            self.stats["swap_out"] += 1
+            info = BlockInfo(vpn=vpn, seg=SWAP, slot=-1, writable=writable)
+            self.blocks[vpn] = info
+            return info
+        slot = self.flex_free.pop()
+        s, b = divmod(vpn, self.cfg.max_blocks_per_seq)
+        self.flex_table[s, b] = slot
+        info = BlockInfo(vpn=vpn, seg=FLEX, slot=slot, writable=writable)
+        self.blocks[vpn] = info
+        self.slot_refcount[slot] = 1
+        self.slot_owner[slot] = vpn
+        self.stats["flex_allocs"] += 1
+        return info
+
+    # ------------------------------------------------------------ eviction
+    def _rest_evict(self, st: int, way: int, to_swap: bool) -> None:
+        """Evict a RestSeg way; migrate the victim to the FlexSeg (or swap)."""
+        victim_vpn = int(self.tar[st, way]) - 1
+        assert victim_vpn >= 0
+        info = self.blocks[victim_vpn]
+        self.reuse_histogram[min(info.reuse, 64)] += 1
+        old_slot = info.slot
+        self.tar[st, way] = 0
+        self.sf[st] -= 1
+        self.srrip.on_remove(st, way)
+        self.slot_owner[old_slot] = -1
+        self.stats["rest_evictions"] += 1
+        if to_swap or not self.flex_free:
+            self.stats["swap_out"] += 1
+            info.seg, info.slot = SWAP, -1
+            return
+        new_slot = self.flex_free.pop()
+        s, b = divmod(victim_vpn, self.cfg.max_blocks_per_seq)
+        self.flex_table[s, b] = new_slot
+        info.seg, info.slot, info.reuse = FLEX, new_slot, 0
+        self.slot_refcount[new_slot] = 1
+        self.slot_owner[new_slot] = victim_vpn
+        self.pending_copies.append((old_slot, new_slot))
+        self.stats["migrations_rest_to_flex"] += 1
+
+    def _release(self, vpn: int) -> None:
+        info = self.blocks[vpn]
+        if info.seg == FLEX:
+            s, b = divmod(vpn, self.cfg.max_blocks_per_seq)
+            self.flex_table[s, b] = -1
+            self.slot_refcount[info.slot] -= 1
+            if self.slot_refcount[info.slot] > 0:
+                # another sequence still references the shared slot
+                del self.blocks[vpn]
+                return
+            del self.slot_refcount[info.slot]
+            if self.slot_owner[info.slot] == vpn:
+                self.slot_owner[info.slot] = -1
+            self.flex_free.append(info.slot)
+        elif info.seg == REST:
+            st = self.hash(vpn, self.cfg.num_sets)
+            way = info.slot - st * self.cfg.assoc
+            self.tar[st, way] = 0
+            self.sf[st] -= 1
+            self.srrip.on_remove(st, way)
+            self.slot_owner[info.slot] = -1
+        del self.blocks[vpn]
+
+    # ----------------------------------------------------------- promotion
+    def record_device_stats(self, vpns: np.ndarray, in_rest: np.ndarray,
+                            accesses: np.ndarray) -> None:
+        """Feed back per-step device translation stats (paper: PTE counters)."""
+        vpns = np.asarray(vpns).ravel()
+        in_rest = np.asarray(in_rest).ravel()
+        accesses = np.asarray(accesses).ravel()
+        hits = vpns[in_rest]
+        for vpn in hits:
+            info = self.blocks.get(int(vpn))
+            if info is not None and info.seg == REST:
+                info.reuse += 1
+                st = self.hash(int(vpn), self.cfg.num_sets)
+                way = info.slot - st * self.cfg.assoc
+                self.srrip.on_hit(st, way)
+        self.stats["rsw_hits"] += int(in_rest.sum())
+        miss = ~in_rest
+        self.stats["flex_walks"] += int(miss.sum())
+        if miss.any():
+            self.tracker.record_walk(vpns[miss], accesses[miss])
+
+    def run_promotions(self) -> int:
+        """Migrate costly-to-translate FlexSeg blocks into the RestSeg."""
+        if self.cfg.mode != "hybrid":
+            return 0
+        n = 0
+        for vpn in self.tracker.take_promotions():
+            info = self.blocks.get(int(vpn))
+            if (info is None or info.seg != FLEX
+                    or self.slot_refcount.get(info.slot, 1) > 1):
+                continue  # shared blocks must stay flexible (paper §5.1)
+            old_slot = info.slot
+            placed = self._try_rest_alloc(int(vpn), info.writable,
+                                          allow_evict=True)
+            if placed is None:
+                continue
+            # _try_rest_alloc re-registered vpn; fix bookkeeping of old slot
+            s, b = divmod(int(vpn), self.cfg.max_blocks_per_seq)
+            self.flex_table[s, b] = -1
+            self.flex_free.append(old_slot)
+            if self.slot_owner[old_slot] == vpn:
+                self.slot_owner[old_slot] = -1
+            self.pending_copies.append((old_slot, placed.slot))
+            self.stats["migrations_flex_to_rest"] += 1
+            n += 1
+        return n
+
+    # ------------------------------------------------------------- sharing
+    def share_prefix(self, src_seq_id: int, dst_seq_id: int,
+                     n_blocks: int) -> int:
+        """Map dst's first n_blocks onto src's physical slots (copy-on-share
+        migration out of the RestSeg first: restrictive slots are tag-bound
+        to a single vpn, the paper's sharing limitation)."""
+        ss = self.seq_slot(src_seq_id)
+        ds = self.seq_slot(dst_seq_id)
+        shared = 0
+        for b in range(n_blocks):
+            src_vpn = self.cfg.vpn(ss, b)
+            info = self.blocks.get(src_vpn)
+            if info is None or info.seg == SWAP:
+                continue
+            if info.seg == REST:
+                info = self._migrate_rest_to_flex(src_vpn)
+                if info is None:
+                    continue
+            dst_vpn = self.cfg.vpn(ds, b)
+            if dst_vpn in self.blocks:
+                self._release(dst_vpn)
+            self.slot_refcount[info.slot] += 1
+            rc = self.slot_refcount[info.slot]
+            self.flex_table[ds, b] = info.slot
+            self.blocks[dst_vpn] = BlockInfo(
+                vpn=dst_vpn, seg=FLEX, slot=info.slot,
+                refcount=rc, writable=False)
+            info.refcount = rc
+            info.writable = False  # copy-on-write semantics after sharing
+            self.stats["shared_blocks"] += 1
+            shared += 1
+        return shared
+
+    def _migrate_rest_to_flex(self, vpn: int) -> Optional[BlockInfo]:
+        if not self.flex_free:
+            return None
+        info = self.blocks[vpn]
+        st = self.hash(vpn, self.cfg.num_sets)
+        way = info.slot - st * self.cfg.assoc
+        old_slot = info.slot
+        self.tar[st, way] = 0
+        self.sf[st] -= 1
+        self.srrip.on_remove(st, way)
+        self.slot_owner[old_slot] = -1
+        new_slot = self.flex_free.pop()
+        s, b = divmod(vpn, self.cfg.max_blocks_per_seq)
+        self.flex_table[s, b] = new_slot
+        info.seg, info.slot = FLEX, new_slot
+        self.slot_refcount[new_slot] = 1
+        self.slot_owner[new_slot] = vpn
+        self.pending_copies.append((old_slot, new_slot))
+        self.stats["migrations_rest_to_flex"] += 1
+        return info
+
+    # ----------------------------------------------------------- swap path
+    def swap_in(self, seq_id: int, block_idx: int) -> BlockInfo:
+        """Bring a swapped block back (counts a swap access, Fig. 9)."""
+        s = self.seq_slot(seq_id)
+        vpn = self.cfg.vpn(s, block_idx)
+        info = self.blocks.get(vpn)
+        if info is None or info.seg != SWAP:
+            raise ValueError(f"vpn {vpn} not in swap")
+        self.stats["swap_in"] += 1
+        del self.blocks[vpn]
+        return self.allocate_block(seq_id, block_idx, info.writable)
+
+    # ------------------------------------------------------------- lookups
+    def lookup(self, seq_id: int, block_idx: int) -> Tuple[int, int]:
+        """Host-side translate; returns (slot, seg)."""
+        s = self.seq_slot(seq_id)
+        vpn = self.cfg.vpn(s, block_idx)
+        info = self.blocks.get(vpn)
+        if info is None:
+            return -1, -1
+        return info.slot, info.seg
+
+    def take_pending_copies(self) -> List[Tuple[int, int]]:
+        out, self.pending_copies = self.pending_copies, []
+        self.stats["copies_issued"] += len(out)
+        return out
+
+    # --------------------------------------------------------- device view
+    def device_state(self):
+        """Pack host mirrors into the device TranslationState."""
+        import jax.numpy as jnp
+        from .tar_sf import RestSegState
+        from .flex_table import FlexTable
+        from .translate import TranslationState
+        return TranslationState(
+            rest=RestSegState(tar=jnp.asarray(self.tar),
+                              sf=jnp.asarray(self.sf),
+                              meta=jnp.zeros_like(jnp.asarray(self.tar))),
+            flex=FlexTable(table=jnp.asarray(self.flex_table)),
+            rest_base=jnp.zeros((), jnp.int32),
+            max_blocks_per_seq=self.cfg.max_blocks_per_seq,
+            hash_name=self.cfg.hash_name,
+        )
+
+    def slot_owner_array(self) -> np.ndarray:
+        """slot -> vpn inverse map (slot-major attention layout)."""
+        return self.slot_owner.copy()
+
+    # ---------------------------------------------------------- invariants
+    def check_invariants(self) -> None:
+        """Debug/property-test oracle: structural consistency."""
+        assert (self.sf == (self.tar != 0).sum(axis=1)).all(), "SF != TAR occupancy"
+        for vpn, info in self.blocks.items():
+            if info.seg == REST:
+                st = self.hash(vpn, self.cfg.num_sets)
+                way = info.slot - st * self.cfg.assoc
+                assert 0 <= way < self.cfg.assoc, f"slot {info.slot} not in set {st}"
+                assert self.tar[st, way] == vpn + 1, "TAR tag mismatch"
+                assert self.slot_owner[info.slot] == vpn
+            elif info.seg == FLEX:
+                s, b = divmod(vpn, self.cfg.max_blocks_per_seq)
+                assert self.flex_table[s, b] == info.slot, "flex table mismatch"
+                assert info.slot >= self.cfg.rest_slots
+        mapped_flex = set(int(x) for x in self.flex_table.ravel() if x >= 0)
+        free_flex = set(self.flex_free)
+        assert not (mapped_flex & free_flex), "slot both mapped and free"

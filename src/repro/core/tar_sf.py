@@ -1,0 +1,118 @@
+"""Tag Array (TAR) + Set Filter (SF): RestSeg translation structures.
+
+Device-side, purely functional (jax.numpy).  The host allocator in
+``kv_manager.py`` keeps a numpy mirror of the same arrays; both sides share
+the hash functions in ``hashes.py`` so they agree bit-for-bit.
+
+Encoding: a TAR entry stores ``vpn + 1`` (0 = invalid/empty way).  ``meta``
+carries the paper's 10 metadata bits (permissions etc.); we use bit0 =
+writable, bit1 = shared.
+
+Paper §5.2 (RestSeg Walk):
+  set   = hash(vpn) % n_sets
+  SF[set] == 0  -> miss without touching TAR   (set filtering)
+  else          -> compare vpn+1 against the M way tags (tag matching)
+  slot  = set * assoc + way                     (restrictive mapping)
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .hashes import get_hash
+
+
+class RestSegState(NamedTuple):
+    """Translation state of one RestSeg (device arrays)."""
+
+    tar: jnp.ndarray    # (n_sets, assoc) int32: vpn+1, 0 = empty
+    sf: jnp.ndarray     # (n_sets,)       int32: set occupancy counter
+    meta: jnp.ndarray   # (n_sets, assoc) int32: 10 metadata bits
+
+    @property
+    def n_sets(self) -> int:
+        return self.tar.shape[0]
+
+    @property
+    def assoc(self) -> int:
+        return self.tar.shape[1]
+
+
+def init_restseg(n_sets: int, assoc: int) -> RestSegState:
+    return RestSegState(
+        tar=jnp.zeros((n_sets, assoc), jnp.int32),
+        sf=jnp.zeros((n_sets,), jnp.int32),
+        meta=jnp.zeros((n_sets, assoc), jnp.int32),
+    )
+
+
+class RSWResult(NamedTuple):
+    hit: jnp.ndarray        # bool  — vpn resides in the RestSeg
+    slot: jnp.ndarray       # int32 — global RestSeg slot (set*assoc+way); 0 if miss
+    way: jnp.ndarray        # int32 — way index; -1 if miss
+    sf_skipped: jnp.ndarray # bool  — SF counter was 0: TAR lookup skipped
+    tar_touched: jnp.ndarray  # int32 — tag comparisons actually performed
+
+
+def rsw(state: RestSegState, vpn: jnp.ndarray, hash_name: str = "modulo") -> RSWResult:
+    """Batched RestSeg Walk.  ``vpn``: int32 array of any shape.
+
+    Two *parallel* small lookups (SF ∥ TAR) versus the flexible walk's four
+    serial ones — the paper's core latency argument.  ``sf_skipped`` and
+    ``tar_touched`` feed the Fig. 23-style locality/traffic benchmarks.
+    """
+    h = get_hash(hash_name)
+    set_idx = h(vpn.astype(jnp.int32), state.n_sets).astype(jnp.int32)
+    counters = state.sf[set_idx]                      # (..., )
+    tags = state.tar[set_idx]                         # (..., assoc)
+    eq = tags == (vpn[..., None].astype(jnp.int32) + 1)
+    nonempty = counters > 0
+    hit = jnp.any(eq, axis=-1) & nonempty
+    way = jnp.where(hit, jnp.argmax(eq, axis=-1).astype(jnp.int32), -1)
+    slot = jnp.where(hit, set_idx * state.assoc + jnp.maximum(way, 0), 0)
+    sf_skipped = ~nonempty
+    tar_touched = jnp.where(nonempty, state.assoc, 0).astype(jnp.int32)
+    return RSWResult(hit=hit, slot=slot.astype(jnp.int32), way=way,
+                     sf_skipped=sf_skipped, tar_touched=tar_touched)
+
+
+def insert(state: RestSegState, vpn: jnp.ndarray, way: jnp.ndarray,
+           hash_name: str = "modulo", meta_bits: int = 1) -> RestSegState:
+    """Functional single-entry insert at a chosen way (allocation is decided
+    host-side; this is the device mirror used in tests/property checks)."""
+    h = get_hash(hash_name)
+    vpn = jnp.asarray(vpn, jnp.int32)
+    way = jnp.asarray(way, jnp.int32)
+    set_idx = h(vpn, state.n_sets).astype(jnp.int32)
+    was_empty = state.tar[set_idx, way] == 0
+    tar = state.tar.at[set_idx, way].set(vpn + 1)
+    meta = state.meta.at[set_idx, way].set(meta_bits)
+    sf = state.sf.at[set_idx].add(jnp.where(was_empty, 1, 0).astype(jnp.int32))
+    return RestSegState(tar=tar, sf=sf, meta=meta)
+
+
+def remove(state: RestSegState, vpn: jnp.ndarray,
+           hash_name: str = "modulo") -> RestSegState:
+    res = rsw(state, jnp.asarray(vpn, jnp.int32)[None], hash_name)
+    hit = res.hit[0]
+    set_idx = get_hash(hash_name)(jnp.asarray(vpn, jnp.int32), state.n_sets)
+    way = jnp.maximum(res.way[0], 0)
+    tar = state.tar.at[set_idx, way].set(
+        jnp.where(hit, 0, state.tar[set_idx, way]))
+    meta = state.meta.at[set_idx, way].set(
+        jnp.where(hit, 0, state.meta[set_idx, way]))
+    sf = state.sf.at[set_idx].add(jnp.where(hit, -1, 0).astype(jnp.int32))
+    return RestSegState(tar=tar, sf=sf, meta=meta)
+
+
+def structure_bytes(state: RestSegState, vpn_space_bits: int = 32) -> dict:
+    """Actual byte footprint of the packed structures (Fig. 13 accounting)."""
+    n_sets, assoc = state.tar.shape
+    set_bits = max(1, (n_sets - 1).bit_length())
+    tag_bits = max(1, vpn_space_bits - set_bits) + 10
+    counter_bits = max(1, (assoc).bit_length())
+    return {
+        "tar_bytes": (n_sets * assoc * tag_bits + 7) // 8,
+        "sf_bytes": (n_sets * counter_bits + 7) // 8,
+    }

@@ -1,0 +1,111 @@
+"""Hybrid translation flow (paper §5.4) — device side, pure JAX.
+
+On every translation request the MMU-analogue runs the RestSeg walk (RSW)
+*in parallel* with the flexible path; only requests that miss the RestSeg
+pay the flexible walk.  This module is:
+
+* the production translation used by ``serve_step`` (flat flex table), and
+* the oracle (``ref``) for the ``utopia_rsw`` Pallas kernel, and
+* the instrumented path used by the paper-table benchmarks (radix/ECH/
+  POM-TLB flexible backends, access & byte accounting).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax.numpy as jnp
+
+from .tar_sf import RestSegState, rsw
+from .flex_table import FlexTable, RadixTable
+from .ech import ECHState
+from .pom_tlb import POMTLBState
+
+
+class TranslationState(NamedTuple):
+    """Everything the device needs to translate vpn -> global pool slot."""
+
+    rest: RestSegState
+    flex: FlexTable
+    rest_base: jnp.ndarray      # () int32: RestSeg slot offset in pool (0)
+    max_blocks_per_seq: int
+    hash_name: str = "modulo"
+
+
+class TranslateResult(NamedTuple):
+    slot: jnp.ndarray        # int32 global pool slot (-1 unmapped)
+    mapped: jnp.ndarray      # bool
+    in_rest: jnp.ndarray     # bool — resolved by the RestSeg walk
+    accesses: jnp.ndarray    # int32 translation-structure accesses performed
+    bytes_touched: jnp.ndarray  # int32 translation metadata bytes moved
+
+
+def translate(state: TranslationState, vpn: jnp.ndarray,
+              tag_entry_bytes: int = 6, flex_entry_bytes: int = 8
+              ) -> TranslateResult:
+    """Hybrid translate.  ``vpn`` int32 array, any shape.
+
+    Access accounting: RSW = SF probe (1 access, counter bytes) + TAR set
+    read when SF > 0 (assoc tags); flexible walk = 1 flat-table access (the
+    radix variant is benchmarked separately via ``translate_radix``).
+    """
+    r = rsw(state.rest, vpn, state.hash_name)
+    flex_slot, flex_mapped = state.flex.lookup_vpn(vpn, state.max_blocks_per_seq)
+
+    slot = jnp.where(r.hit, state.rest_base + r.slot,
+                     jnp.where(flex_mapped, flex_slot, -1))
+    mapped = r.hit | flex_mapped
+
+    sf_acc = jnp.ones_like(vpn)
+    tar_acc = jnp.where(r.sf_skipped, 0, 1)
+    flex_acc = jnp.where(r.hit, 0, 1)          # flexible walk only on RSW miss
+    accesses = sf_acc + tar_acc + flex_acc
+    bytes_touched = (sf_acc                    # 1-byte SF counter
+                     + r.tar_touched * tag_entry_bytes
+                     + flex_acc * flex_entry_bytes)
+    return TranslateResult(slot=slot.astype(jnp.int32), mapped=mapped,
+                           in_rest=r.hit, accesses=accesses.astype(jnp.int32),
+                           bytes_touched=bytes_touched.astype(jnp.int32))
+
+
+# --- benchmark variants: alternative flexible backends ---------------------
+
+def translate_radix(rest: Optional[RestSegState], radix: RadixTable,
+                    vpn: jnp.ndarray, hash_name: str = "modulo",
+                    entry_bytes: int = 8) -> TranslateResult:
+    """Hybrid (or pure when rest=None) translation over the radix baseline."""
+    flex_slot, flex_ok, walk_acc = radix.walk(vpn)
+    if rest is None:
+        return TranslateResult(slot=flex_slot, mapped=flex_ok,
+                               in_rest=jnp.zeros(vpn.shape, bool),
+                               accesses=walk_acc,
+                               bytes_touched=walk_acc * entry_bytes)
+    r = rsw(rest, vpn, hash_name)
+    slot = jnp.where(r.hit, r.slot, flex_slot)
+    mapped = r.hit | flex_ok
+    accesses = 1 + jnp.where(r.sf_skipped, 0, 1) + jnp.where(r.hit, 0, walk_acc)
+    byt = 1 + r.tar_touched * 6 + jnp.where(r.hit, 0, walk_acc * entry_bytes)
+    return TranslateResult(slot=slot, mapped=mapped, in_rest=r.hit,
+                           accesses=accesses.astype(jnp.int32),
+                           bytes_touched=byt.astype(jnp.int32))
+
+
+def translate_ech(ech: ECHState, vpn: jnp.ndarray,
+                  entry_bytes: int = 8) -> TranslateResult:
+    slot, hit, acc = ech.lookup(vpn)
+    return TranslateResult(slot=slot, mapped=hit,
+                           in_rest=jnp.zeros(vpn.shape, bool),
+                           accesses=acc, bytes_touched=acc * entry_bytes)
+
+
+def translate_pom(pom: POMTLBState, radix: RadixTable, vpn: jnp.ndarray,
+                  entry_bytes: int = 8) -> TranslateResult:
+    """POM-TLB probe backed by the radix walk on miss."""
+    slot, hit, acc = pom.lookup(vpn)
+    r_slot, r_ok, r_acc = radix.walk(vpn)
+    out_slot = jnp.where(hit, slot, r_slot)
+    mapped = hit | r_ok
+    accesses = acc + jnp.where(hit, 0, r_acc)
+    return TranslateResult(slot=out_slot, mapped=mapped,
+                           in_rest=jnp.zeros(vpn.shape, bool),
+                           accesses=accesses.astype(jnp.int32),
+                           bytes_touched=(accesses * entry_bytes).astype(jnp.int32))

@@ -1,0 +1,6 @@
+"""Oracle: dense attention (shared with the model zoo's reference impl)."""
+from repro.models.attention import dense_attention
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    return dense_attention(q, k, v, causal=causal)

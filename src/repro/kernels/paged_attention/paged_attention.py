@@ -1,0 +1,137 @@
+"""Pallas TPU kernel: decode-time paged attention over the hybrid KV pool.
+
+Seq-major decode (vLLM-layout analogue): one query token per sequence
+attends over its logical blocks; physical slots come from the Utopia hybrid
+translation (the RSW kernel's output), delivered via *scalar prefetch* so
+the BlockSpec ``index_map`` can steer the DMA of each grid step to the
+right pool slot — the TPU analogue of the paper's "translation resolved
+before the data access, overlapped with the previous tile's compute"
+(software pipelining replaces the paper's RSW ∥ L2-TLB parallelism).
+
+Grid: (batch, num_blocks).  Scratch carries the online-softmax (m, l, acc)
+across the block dimension.  Outputs are the *unnormalized* weighted values
+plus (m, l) so the caller can combine partial results across model shards
+(flash-decoding psum combine) before normalizing.
+
+Holes (slot == -1: unmapped/swapped blocks) and tokens past the context
+length are masked; hole blocks are clamped to slot 0 for the DMA and fully
+masked in the body.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_attn_kernel(slots_ref, ctx_ref, q_ref, k_ref, v_ref,
+                       o_ref, m_ref, l_ref,
+                       acc_ref, m_scr, l_scr, *,
+                       block_tokens: int, tok_offset: int, tok_stride: int,
+                       n_blocks: int):
+    b = pl.program_id(0)
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+
+    q = q_ref[0].astype(jnp.float32)                    # (H, D)
+    k = k_ref[0].astype(jnp.float32)                    # (bs, KV, D)
+    v = v_ref[0].astype(jnp.float32)
+    H, D = q.shape
+    bs, KV, _ = k.shape
+    g = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    slot = slots_ref[b, j]
+    ctx = ctx_ref[b]
+    # global token positions of this (block, local-token-shard) tile
+    pos = j * block_tokens + tok_offset + jnp.arange(bs) * tok_stride
+    valid = (pos < ctx) & (slot >= 0)                   # (bs,)
+
+    qk = q.reshape(KV, g, D)
+    s = jnp.einsum("kgd,tkd->kgt", qk, k) * scale       # (KV, g, bs)
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+
+    m_prev = m_scr[...]                                 # (KV, g)
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.exp(s - m_new[..., None])
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
+        "kgt,tkd->kgd", p, v)
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(j == n_blocks - 1)
+    def _finish():
+        o_ref[0] = acc_ref[...].reshape(H, D).astype(o_ref.dtype)
+        m_ref[0] = m_scr[...].reshape(H).astype(m_ref.dtype)
+        l_ref[0] = l_scr[...].reshape(H).astype(l_ref.dtype)
+
+
+def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
+                           slots: jax.Array, ctx_len: jax.Array, *,
+                           tok_offset: int = 0, tok_stride: int = 1,
+                           block_tokens: int | None = None,
+                           interpret: bool = True):
+    """q (B,H,D); k/v_pool (slots, bs_local, KV, D); slots (B, nblk) int32;
+    ctx_len (B,) int32.  Returns (o_weighted (B,H,D), m (B,H), l (B,H)).
+
+    ``tok_offset``/``tok_stride`` describe which global token positions the
+    local pool token-shard holds (model-axis token striping); on a single
+    shard use (0, 1) and ``block_tokens = bs_local``.
+    """
+    B, H, D = q.shape
+    n_slots, bs, KV, _ = k_pool.shape
+    nblk = slots.shape[1]
+    if block_tokens is None:
+        block_tokens = bs
+    kernel = functools.partial(
+        _paged_attn_kernel, block_tokens=block_tokens, tok_offset=tok_offset,
+        tok_stride=tok_stride, n_blocks=nblk)
+    g = H // KV
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                     # slots, ctx_len
+        grid=(B, nblk),
+        in_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, slots, ctx: (b, 0, 0)),
+            pl.BlockSpec((1, bs, KV, D),
+                         lambda b, j, slots, ctx:
+                         (jnp.maximum(slots[b, j], 0), 0, 0, 0)),
+            pl.BlockSpec((1, bs, KV, D),
+                         lambda b, j, slots, ctx:
+                         (jnp.maximum(slots[b, j], 0), 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, H, D), lambda b, j, slots, ctx: (b, 0, 0)),
+            pl.BlockSpec((1, H), lambda b, j, slots, ctx: (b, 0)),
+            pl.BlockSpec((1, H), lambda b, j, slots, ctx: (b, 0)),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((KV, g, D), jnp.float32),
+            pltpu.VMEM((KV, g), jnp.float32),
+            pltpu.VMEM((KV, g), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, H, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(slots, ctx_len, q, k_pool, v_pool)

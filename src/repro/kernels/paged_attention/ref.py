@@ -1,0 +1,45 @@
+"""Pure-jnp oracle for decode paged attention over the hybrid pool."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pool, v_pool, slots, ctx_len, *,
+                        tok_offset: int = 0, tok_stride: int = 1,
+                        block_tokens: int | None = None):
+    """Same contract as the kernel: returns (o_weighted, m, l)."""
+    B, H, D = q.shape
+    n_slots, bs, KV, _ = k_pool.shape
+    nblk = slots.shape[1]
+    if block_tokens is None:
+        block_tokens = bs
+    g = H // KV
+    scale = 1.0 / math.sqrt(D)
+
+    safe = jnp.maximum(slots, 0)
+    k = k_pool[safe]                                    # (B, nblk, bs, KV, D)
+    v = v_pool[safe]
+    pos = (jnp.arange(nblk)[:, None] * block_tokens
+           + tok_offset + jnp.arange(bs)[None, :] * tok_stride)  # (nblk, bs)
+    valid = (pos[None] < ctx_len[:, None, None]) & (slots >= 0)[..., None]
+
+    qk = q.astype(jnp.float32).reshape(B, KV, g, D)
+    s = jnp.einsum("bkgd,bjtkd->bkgjt", qk, k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    s = s.reshape(B, KV, g, nblk * bs)
+    m = s.max(axis=-1)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(valid[:, None, None].reshape(B, 1, 1, -1), p, 0.0)
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgn,bnkd->bkgd", p,
+                   v.astype(jnp.float32).reshape(B, nblk * bs, KV, D))
+    return (o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+
+
+def normalize(o, l):
+    return o / jnp.maximum(l, 1e-30)[..., None]

@@ -1,0 +1,84 @@
+"""Pallas TPU kernel: Utopia RestSeg Walk (hybrid translation).
+
+The paper's RSW (§5.2) adapted to the TPU memory hierarchy:
+
+* TAR and SF live wholly in VMEM (kernel operands with full-array
+  BlockSpecs) — the analogue of the paper's dedicated 2 KB TAR/SF SRAM
+  caches, except sized so the *entire* structure is resident (a 512 MB-
+  equivalent RestSeg needs ~600 KB of TAR+SF, well under VMEM).
+* Tag matching is performed as a one-hot matmul over the TAR
+  (``one_hot(set_idx) @ tar``): on TPU a data-dependent row gather is
+  slow/unsupported on the VPU, while a (tile, n_sets) x (n_sets, assoc)
+  matmul maps directly onto the MXU.  This is the central
+  hardware-adaptation decision recorded in DESIGN.md.
+* The FlexSeg fallback is a flat-table vector gather, only consumed for
+  lanes whose RSW missed (the paper's "FSW only on RSW miss").
+
+Grid: one program per tile of ``tile`` vpns.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashes import get_hash
+
+
+def _rsw_kernel(vpn_ref, tar_ref, sf_ref, flex_ref, slot_ref, in_rest_ref,
+                mapped_ref, *, assoc: int, hash_name: str):
+    vpn = vpn_ref[...]                                  # (tile,)
+    tar = tar_ref[...]                                  # (n_sets, assoc)
+    sf = sf_ref[...]                                    # (n_sets,)
+    n_sets = tar.shape[0]
+    h = get_hash(hash_name)
+    set_idx = h(vpn, n_sets).astype(jnp.int32)          # (tile,)
+
+    # --- set filtering (SF probe) + tag matching via one-hot MXU matmul ---
+    onehot = jax.nn.one_hot(set_idx, n_sets, dtype=jnp.float32)  # (tile, n_sets)
+    tags = (onehot @ tar.astype(jnp.float32)).astype(jnp.int32)  # (tile, assoc)
+    counters = (onehot @ sf.astype(jnp.float32)[:, None]
+                ).astype(jnp.int32)[:, 0]                        # (tile,)
+    eq = tags == (vpn[:, None] + 1)
+    hit = jnp.any(eq, axis=-1) & (counters > 0)
+    way = jnp.argmax(eq, axis=-1).astype(jnp.int32)
+    rest_slot = set_idx * assoc + jnp.where(hit, way, 0)
+
+    # --- flexible fallback (flat block table, consumed on miss only) ---
+    flex_slot = flex_ref[...][vpn]                      # (tile,)
+    slot = jnp.where(hit, rest_slot, flex_slot)
+    mapped = hit | (flex_slot >= 0)
+
+    slot_ref[...] = jnp.where(mapped, slot, -1).astype(jnp.int32)
+    in_rest_ref[...] = hit.astype(jnp.int32)
+    mapped_ref[...] = mapped.astype(jnp.int32)
+
+
+def rsw_pallas(vpns: jax.Array, tar: jax.Array, sf: jax.Array,
+               flex_flat: jax.Array, *, hash_name: str = "modulo",
+               tile: int = 128, interpret: bool = True):
+    """vpns (N,) int32 -> (slot (N,), in_rest (N,), mapped (N,)) int32."""
+    n = vpns.shape[0]
+    n_sets, assoc = tar.shape
+    pad = (-n) % tile
+    vp = jnp.pad(vpns, (0, pad)) if pad else vpns
+    grid = (vp.shape[0] // tile,)
+    kernel = functools.partial(_rsw_kernel, assoc=assoc, hash_name=hash_name)
+    out_shapes = [jax.ShapeDtypeStruct((vp.shape[0],), jnp.int32)] * 3
+    full = lambda shape: pl.BlockSpec(shape, lambda i: tuple(0 for _ in shape))
+    slot, in_rest, mapped = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile,), lambda i: (i,)),
+            full(tar.shape),          # TAR: fully VMEM-resident
+            full(sf.shape),           # SF: fully VMEM-resident
+            full(flex_flat.shape),    # flat flex table (validation config)
+        ],
+        out_specs=[pl.BlockSpec((tile,), lambda i: (i,))] * 3,
+        out_shape=out_shapes,
+        interpret=interpret,
+    )(vp, tar, sf, flex_flat)
+    return slot[:n], in_rest[:n], mapped[:n]

@@ -1,0 +1,101 @@
+"""Named perf variants for the §Perf hillclimb.
+
+A variant is a (cfg, rules, fwd-overrides) transform applied before a
+dry-run cell is built, so each hypothesis in EXPERIMENTS.md §Perf is a
+one-flag re-run:  ``--perf-variant triangular`` etc.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+def apply(name: str, cfg, rules, shape, multi_pod: bool):
+    """Returns (cfg, rules, fwd_overrides dict)."""
+    fwd = {}
+    if name == "baseline":
+        return cfg, rules, fwd
+    if name == "triangular":
+        # causal flash: skip above-diagonal KV chunks (halves attn FLOPs)
+        fwd["triangular_schedule"] = True
+        return cfg, rules, fwd
+    if name == "no_zero":
+        # keep params TP-only (no data-axis FSDP): removes per-layer
+        # all-gathers at the cost of replicated param memory
+        rules = dataclasses.replace(rules, zero_params=False)
+        return cfg, rules, fwd
+    if name == "no_remat":
+        cfg = dataclasses.replace(cfg, remat=False)
+        return cfg, rules, fwd
+    if name == "remat":
+        cfg = dataclasses.replace(cfg, remat=True)
+        return cfg, rules, fwd
+    if name == "big_chunks":
+        fwd["q_chunk"] = 2048
+        fwd["kv_chunk"] = 2048
+        return cfg, rules, fwd
+    if name == "small_chunks":
+        fwd["q_chunk"] = 512
+        fwd["kv_chunk"] = 512
+        return cfg, rules, fwd
+    if name == "triangular_no_zero":
+        fwd["triangular_schedule"] = True
+        rules = dataclasses.replace(rules, zero_params=False)
+        return cfg, rules, fwd
+    if name == "gather_once":
+        rules = dataclasses.replace(rules, gather_once=True)
+        return cfg, rules, fwd
+    if name == "gather_once_no_zero":
+        rules = dataclasses.replace(rules, gather_once=True,
+                                    zero_params=False)
+        return cfg, rules, fwd
+    if name == "gather_once_triangular":
+        rules = dataclasses.replace(rules, gather_once=True)
+        fwd["triangular_schedule"] = True
+        return cfg, rules, fwd
+    if name == "kv_int8":
+        return cfg, rules, {"_kv_int8": True}
+    if name == "kv_int8_no_zero":
+        rules = dataclasses.replace(rules, zero_params=False)
+        return cfg, rules, {"_kv_int8": True}
+    if name == "megatron":
+        return cfg, rules, {"_megatron": True}
+    if name == "megatron_triangular":
+        fwd["triangular_schedule"] = True
+        fwd["_megatron"] = True
+        return cfg, rules, fwd
+    if name == "nosp_mb8":
+        cfg = dataclasses.replace(cfg, train_microbatches=8)
+        rules = dataclasses.replace(rules, shard_activations=False)
+        return cfg, rules, fwd
+    if name == "nosp_mb8_triangular":
+        cfg = dataclasses.replace(cfg, train_microbatches=8)
+        rules = dataclasses.replace(rules, shard_activations=False)
+        fwd["triangular_schedule"] = True
+        return cfg, rules, fwd
+    if name == "nosp_mb16":
+        cfg = dataclasses.replace(cfg, train_microbatches=16)
+        rules = dataclasses.replace(rules, shard_activations=False)
+        return cfg, rules, fwd
+    if name == "mb1":
+        cfg = dataclasses.replace(cfg, train_microbatches=1)
+        return cfg, rules, fwd
+    if name == "mb2":
+        cfg = dataclasses.replace(cfg, train_microbatches=2)
+        return cfg, rules, fwd
+    if name == "mb1_triangular":
+        cfg = dataclasses.replace(cfg, train_microbatches=1)
+        fwd["triangular_schedule"] = True
+        return cfg, rules, fwd
+    if name == "mb8":
+        cfg = dataclasses.replace(cfg, train_microbatches=8)
+        return cfg, rules, fwd
+    if name == "mb16":
+        cfg = dataclasses.replace(cfg, train_microbatches=16)
+        return cfg, rules, fwd
+    if name == "capacity_1":
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=1.0)
+        return cfg, rules, fwd
+    if name == "capacity_2":
+        cfg = dataclasses.replace(cfg, moe_capacity_factor=2.0)
+        return cfg, rules, fwd
+    raise ValueError(f"unknown perf variant {name!r}")

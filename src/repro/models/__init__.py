@@ -1,0 +1,9 @@
+"""Model zoo: dense/MoE/VLM/audio/hybrid/SSM families."""
+from .transformer import (ModelDims, FwdOptions, model_dims, init_params,
+                          forward, loss_fn)
+from .attention import attention, dense_attention, flash_attention_jax
+from . import layers, moe, ssm
+
+__all__ = ["ModelDims", "FwdOptions", "model_dims", "init_params", "forward",
+           "loss_fn", "attention", "dense_attention", "flash_attention_jax",
+           "layers", "moe", "ssm"]

@@ -1,0 +1,255 @@
+"""Mamba2 blocks via SSD (state-space duality), chunked matmul form.
+
+Implements the minimal-SSD algorithm (Dao & Gu, arXiv:2405.21060): the
+sequence is split into chunks; intra-chunk work is a masked matmul (MXU
+friendly), inter-chunk work is a tiny recurrence over per-chunk states —
+the TPU-native adaptation of the paper's hardware-aware scan.
+
+Decode is the exact SSM recurrence (O(1)/token), which is why ssm/hybrid
+archs run the ``long_500k`` cell.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Pins, no_pins, gated_rms_norm, init_norm
+
+
+class MambaDims(NamedTuple):
+    d_model: int
+    d_inner: int
+    n_heads: int
+    head_dim: int
+    d_state: int
+    conv_width: int
+
+    @property
+    def conv_channels(self) -> int:
+        return self.d_inner + 2 * self.d_state
+
+    @property
+    def in_proj_out(self) -> int:
+        # z, x, B, C, dt
+        return 2 * self.d_inner + 2 * self.d_state + self.n_heads
+
+
+def mamba_dims(d_model: int, d_state: int, head_dim: int, expand: int,
+               conv_width: int, tp: int = 1) -> MambaDims:
+    d_inner = expand * d_model
+    n_heads = d_inner // head_dim
+    if n_heads % tp:
+        n_heads = ((n_heads + tp - 1) // tp) * tp   # pad heads to TP degree
+        d_inner = n_heads * head_dim
+    return MambaDims(d_model, d_inner, n_heads, head_dim, d_state, conv_width)
+
+
+def init_mamba(key, dims: MambaDims, dtype=jnp.float32) -> dict:
+    kin, kconv, kout, kdt = jax.random.split(key, 4)
+    kz, kxbc = jax.random.split(kin)
+    s = 1.0 / math.sqrt(dims.d_model)
+    return {
+        # z / xBC / dt projections are SEPARATE weights: a packed in_proj's
+        # split points (d_inner, d_inner+2n, ...) do not align with model-
+        # axis shard boundaries, forcing GSPMD to all-gather the full
+        # projection (measured: 2 GiB fp32 per layer on jamba-398b)
+        "in_z": (jax.random.normal(
+            kz, (dims.d_model, dims.d_inner), jnp.float32) * s
+            ).astype(dtype),
+        "in_x": (jax.random.normal(
+            kxbc, (dims.d_model, dims.d_inner), jnp.float32) * s
+            ).astype(dtype),
+        "in_B": (jax.random.normal(
+            jax.random.fold_in(kxbc, 1),
+            (dims.d_model, dims.d_state), jnp.float32) * s).astype(dtype),
+        "in_C": (jax.random.normal(
+            jax.random.fold_in(kxbc, 2),
+            (dims.d_model, dims.d_state), jnp.float32) * s).astype(dtype),
+        "in_dt": (jax.random.normal(
+            kdt, (dims.d_model, dims.n_heads), jnp.float32) * s
+            ).astype(dtype),
+        "conv_w": (jax.random.normal(
+            kconv, (dims.conv_width, dims.conv_channels), jnp.float32)
+            / math.sqrt(dims.conv_width)).astype(dtype),
+        "conv_b": jnp.zeros((dims.conv_channels,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, dims.n_heads)
+                         ).astype(jnp.float32),
+        "D": jnp.ones((dims.n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((dims.n_heads,), jnp.float32),
+        "norm": init_norm(dims.d_inner, dtype),
+        "out_proj": (jax.random.normal(
+            kout, (dims.d_inner, dims.d_model), jnp.float32)
+            / math.sqrt(dims.d_inner)).astype(dtype),
+    }
+
+
+def _causal_depthwise_conv(xbc: jax.Array, w: jax.Array, b: jax.Array):
+    """xbc: (B, L, C); w: (W, C) depthwise causal."""
+    W, C = w.shape
+    lhs = xbc
+    rhs = w[:, None, :]  # (W, 1, C) 'WIO' with feature groups = C
+    out = jax.lax.conv_general_dilated(
+        lhs, rhs, window_strides=(1,), padding=[(W - 1, 0)],
+        dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=C)
+    return out + b
+
+
+def _segsum(x: jax.Array) -> jax.Array:
+    """x: (..., T) -> (..., T, T) lower-tri cumulative segment sums."""
+    T = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    ss = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool), k=0)
+    return jnp.where(mask, ss, -jnp.inf)
+
+
+def ssd_chunked(xd: jax.Array, dtA: jax.Array, B_: jax.Array, C_: jax.Array,
+                chunk: int, initial_state: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xd:  (b, l, h, p)  dt-prescaled inputs
+    dtA: (b, l, h)     dt * A (negative)
+    B_:  (b, l, n)     input projection (single group)
+    C_:  (b, l, n)     output projection
+    Returns (y (b,l,h,p), final_state (b,h,p,n)).
+    """
+    b, l, h, p = xd.shape
+    n = B_.shape[-1]
+    if l % chunk:
+        raise ValueError(f"seq len {l} must divide chunk {chunk}")
+    c = l // chunk
+    xc = xd.reshape(b, c, chunk, h, p).astype(jnp.float32)
+    ac = dtA.reshape(b, c, chunk, h).astype(jnp.float32)
+    Bc = B_.reshape(b, c, chunk, n).astype(jnp.float32)
+    Cc = C_.reshape(b, c, chunk, n).astype(jnp.float32)
+
+    a_cum = jnp.cumsum(ac, axis=2)                       # (b,c,k,h)
+    # --- intra-chunk (matmul form) ---
+    L = jnp.exp(_segsum(ac.transpose(0, 1, 3, 2)))       # (b,c,h,k,k)
+    scores = jnp.einsum("bckn,bcln->bckl", Cc, Bc)
+    y_diag = jnp.einsum("bckl,bchkl,bclhp->bckhp", scores, L, xc)
+    # --- per-chunk states ---
+    decay_states = jnp.exp(a_cum[:, :, -1:, :] - a_cum)  # (b,c,k,h)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xc)
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])            # (b,c,h)
+
+    def step(s, inp):
+        st, dec = inp                                    # (b,h,p,n), (b,h)
+        s_new = s * dec[..., None, None] + st
+        return s_new, s                                  # emit state BEFORE chunk
+
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if initial_state is None
+          else initial_state.astype(jnp.float32))
+    final_state, prev_states = jax.lax.scan(
+        step, s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # (b,c,h,p,n)
+    # --- off-diagonal contribution ---
+    y_off = jnp.einsum("bckn,bchpn,bckh->bckhp", Cc, prev_states,
+                       jnp.exp(a_cum))
+    y = (y_diag + y_off).reshape(b, l, h, p)
+    return y, final_state
+
+
+def mamba_forward(p: dict, x: jax.Array, dims: MambaDims, *, chunk: int = 64,
+                  pins: Pins = no_pins,
+                  initial_state: Optional[jax.Array] = None,
+                  return_state: bool = False):
+    """Full mamba2 block on (B, L, D). Returns (out, final_state|None)."""
+    B, L, D = x.shape
+    di, n = dims.d_inner, dims.d_state
+    z = x @ p["in_z"].astype(x.dtype)
+    x_raw = x @ p["in_x"].astype(x.dtype)
+    B_raw = x @ p["in_B"].astype(x.dtype)
+    C_raw = x @ p["in_C"].astype(x.dtype)
+    dt_raw = x @ p["in_dt"].astype(x.dtype)
+    conv_tail = jnp.concatenate(
+        [x_raw, B_raw, C_raw], axis=-1)[:, -(dims.conv_width - 1):, :]
+    # depthwise conv applies per channel, so convolving x/B/C separately is
+    # exactly the packed conv (keeps each activation shard-aligned)
+    cw = p["conv_w"].astype(x.dtype)
+    cb = p["conv_b"].astype(x.dtype)
+    xs = jax.nn.silu(_causal_depthwise_conv(x_raw, cw[:, :di], cb[:di]))
+    B_ = jax.nn.silu(_causal_depthwise_conv(
+        B_raw, cw[:, di:di + n], cb[di:di + n]))
+    C_ = jax.nn.silu(_causal_depthwise_conv(
+        C_raw, cw[:, di + n:], cb[di + n:]))
+    xs = pins("ssm_inner", xs)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    A = -jnp.exp(p["A_log"])                                         # (H,)
+    xh = xs.reshape(B, L, dims.n_heads, dims.head_dim)
+    pad = (-L) % chunk
+    if pad and return_state:
+        raise ValueError(f"seq len {L} must divide chunk {chunk} when the "
+                         "final state is needed (prefill)")
+    if pad:
+        # zero-pad dt so padded positions are identity transitions; the
+        # causal scan makes y[:, :L] exact regardless of the tail
+        xh_p = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt_p = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_p = jnp.pad(B_, ((0, 0), (0, pad), (0, 0)))
+        C_p = jnp.pad(C_, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xh_p, dt_p, B_p, C_p = xh, dt, B_, C_
+    y, final_state = ssd_chunked(
+        xh_p.astype(jnp.float32) * dt_p[..., None], dt_p * A, B_p, C_p,
+        chunk=chunk, initial_state=initial_state)
+    if pad:
+        y = y[:, :L]
+    y = y + xh.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, L, dims.d_inner).astype(x.dtype)
+    out = gated_rms_norm(y, z, p["norm"].astype(jnp.float32))
+    out = out @ p["out_proj"].astype(x.dtype)
+    if return_state:
+        return out, MambaCache(conv=conv_tail, state=final_state)
+    return out, None
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, W-1, conv_channels) trailing conv inputs
+    state: jax.Array  # (B, H, P, N) SSM state
+
+
+def init_mamba_cache(batch: int, dims: MambaDims, dtype=jnp.float32
+                     ) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, dims.conv_width - 1, dims.conv_channels), dtype),
+        state=jnp.zeros((batch, dims.n_heads, dims.head_dim, dims.d_state),
+                        jnp.float32),
+    )
+
+
+def mamba_decode_step(p: dict, x: jax.Array, cache: MambaCache,
+                      dims: MambaDims, pins: Pins = no_pins
+                      ) -> Tuple[jax.Array, MambaCache]:
+    """One-token recurrence. x: (B, D) -> (out (B, D), new cache)."""
+    B, D = x.shape
+    di, n = dims.d_inner, dims.d_state
+    z = x @ p["in_z"].astype(x.dtype)
+    xbc_new = jnp.concatenate(
+        [x @ p["in_x"].astype(x.dtype), x @ p["in_B"].astype(x.dtype),
+         x @ p["in_C"].astype(x.dtype)], axis=-1)
+    dt_raw = x @ p["in_dt"].astype(x.dtype)
+    window = jnp.concatenate([cache.conv, xbc_new[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + p["conv_b"]
+    xbc = jax.nn.silu(conv_out).astype(x.dtype)
+    xs, B_, C_ = jnp.split(xbc, [di, di + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # (B,H)
+    A = -jnp.exp(p["A_log"])
+    xh = xs.reshape(B, dims.n_heads, dims.head_dim).astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                           # (B,H)
+    state = cache.state * decay[..., None, None] + jnp.einsum(
+        "bn,bhp,bh->bhpn", B_.astype(jnp.float32), xh, dt)
+    y = jnp.einsum("bn,bhpn->bhp", C_.astype(jnp.float32), state)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(B, dims.d_inner).astype(x.dtype)
+    out = gated_rms_norm(y, z, p["norm"].astype(jnp.float32))
+    out = out @ p["out_proj"].astype(x.dtype)
+    new_cache = MambaCache(conv=window[:, 1:, :], state=state)
+    return out, new_cache

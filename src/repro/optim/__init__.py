@@ -1,0 +1,8 @@
+from .optimizers import (adamw_init, adamw_update, adafactor_init,
+                         adafactor_update, make_optimizer, global_norm,
+                         clip_by_global_norm)
+from .schedules import warmup_cosine, warmup_linear, constant
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+           "make_optimizer", "global_norm", "clip_by_global_norm",
+           "warmup_cosine", "warmup_linear", "constant"]

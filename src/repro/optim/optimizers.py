@@ -1,0 +1,170 @@
+"""Optimizers: AdamW and Adafactor (factored second moment for 100B+ models).
+
+Functional, pytree-based; optimizer state inherits the parameter sharding
+(plus the ZeRO data-axis sharding), so at 256+ chips the state is fully
+distributed.  Adafactor keeps a rank-1 factorization of the second moment
+for >=2D tensors — the reason qwen2-72b/jamba-398b fit the v5e HBM budget
+(see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), norm
+
+
+def _zip_map(fn, treedef, *flats):
+    outs = [fn(*leaves) for leaves in zip(*flats)]
+    n_out = len(outs[0])
+    return tuple(treedef.unflatten([o[i] for o in outs]) for i in range(n_out))
+
+
+# ------------------------------------------------------------------- AdamW
+
+def adamw_init(params):
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params),
+    }
+
+
+def adamw_update(grads, state, params, step, lr, *, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    t = (step + 1).astype(jnp.float32)
+    bc1 = 1 - b1 ** t
+    bc2 = 1 - b2 ** t
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        new_p = p.astype(jnp.float32) - lr * (u + weight_decay *
+                                              p.astype(jnp.float32))
+        return new_p.astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    new_params, new_m, new_v = _zip_map(upd, treedef, flat_g, flat_m,
+                                        flat_v, flat_p)
+    return new_params, {"m": new_m, "v": new_v}
+
+
+# --------------------------------------------------------------- Adafactor
+
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor_init(params):
+    def init(p):
+        if _factored(p.shape):
+            return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+    flat_p, treedef = jax.tree.flatten(params)
+    return {"v": treedef.unflatten([init(p) for p in flat_p])}
+
+
+_CHUNK_THRESHOLD = 1 << 26   # elements; above this, update in chunks
+
+
+def adafactor_update(grads, state, params, step, lr, *, decay=0.8,
+                     eps=1e-30, clip_threshold=1.0, weight_decay=0.0):
+    t = (step + 1).astype(jnp.float32)
+    beta2 = 1.0 - t ** (-decay)
+
+    def stats_and_u(g32, s):
+        """Factored second-moment update + unclipped update direction."""
+        g2 = g32 * g32 + eps
+        if _factored(g32.shape):
+            vr = beta2 * s["vr"] + (1 - beta2) * g2.mean(axis=-1)
+            vc = beta2 * s["vc"] + (1 - beta2) * g2.mean(axis=-2)
+            denom = jnp.maximum(vr.mean(axis=-1, keepdims=True), eps)
+            u = g32 / (jnp.sqrt(vr / denom)[..., None]
+                       * jnp.sqrt(vc)[..., None, :])
+            return u, {"vr": vr, "vc": vc}
+        v = beta2 * s["v"] + (1 - beta2) * g2
+        return g32 / jnp.sqrt(v), {"v": v}
+
+    def upd_small(g, s, p):
+        u, new_s = stats_and_u(g.astype(jnp.float32), s)
+        rms_u = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+        u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+        new_p = p.astype(jnp.float32) - lr * (u + weight_decay *
+                                              p.astype(jnp.float32))
+        return new_p.astype(p.dtype), new_s
+
+    def upd_chunked(g, s, p):
+        """Two sequential chunked passes over axis 0: caps the fp32 update
+        temporaries at 1/n_chunks of the leaf (100B+ models would otherwise
+        keep ~6 fp32 leaf-sized copies live; measured on jamba-398b)."""
+        n = g.shape[0]
+
+        def pass1(args):
+            g_c, s_c = args
+            u, new_s = stats_and_u(g_c.astype(jnp.float32), s_c)
+            return jnp.sum(jnp.square(u)), new_s
+
+        ss, new_s = jax.lax.map(pass1, (g, s))
+        # float(): leaves can exceed int32 (29e9 elements on jamba-398b)
+        rms_u = jnp.sqrt(ss.sum() / float(g.size) + 1e-12)
+        scale = jnp.maximum(1.0, rms_u / clip_threshold)
+
+        def pass2(args):
+            g_c, s_c, p_c = args
+            u, _ = stats_and_u(g_c.astype(jnp.float32), s_c)
+            p32 = p_c.astype(jnp.float32)
+            return (p32 - lr * (u / scale + weight_decay * p32)
+                    ).astype(p_c.dtype)
+
+        # pass2 re-derives u from the PRE-update stats: feed the old state
+        new_p = jax.lax.map(pass2, (g, s, p))
+        return new_p, new_s
+
+    def upd(g, s, p):
+        if g.size > _CHUNK_THRESHOLD and _factored(g.shape) and g.ndim >= 3:
+            return upd_chunked(g, s, p)
+        return upd_small(g, s, p)
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_s = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    new_params, new_state = _zip_map(upd, treedef, flat_g, flat_s, flat_p)
+    return new_params, {"v": new_state}
+
+
+# ---------------------------------------------------------------- factory
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable
+    update: Callable  # (grads, state, params, step, lr) -> (params, state)
+
+
+def make_optimizer(name: str, **kwargs) -> Optimizer:
+    if name == "adamw":
+        upd = lambda g, s, p, step, lr: adamw_update(g, s, p, step, lr,
+                                                     **kwargs)
+        return Optimizer("adamw", adamw_init, upd)
+    if name == "adafactor":
+        upd = lambda g, s, p, step, lr: adafactor_update(g, s, p, step, lr,
+                                                         **kwargs)
+        return Optimizer("adafactor", adafactor_init, upd)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,28 @@
+"""LR schedules (pure functions of the step counter)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def warmup_linear(lr: float, warmup: int, total: int):
+    def f(step):
+        step = step.astype(jnp.float32)
+        wu = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        decay = jnp.maximum(1.0 - (step - warmup) / jnp.maximum(
+            total - warmup, 1), 0.0)
+        return lr * wu * jnp.where(step < warmup, 1.0, decay)
+    return f
+
+
+def warmup_cosine(lr: float, warmup: int, total: int, min_ratio: float = 0.1):
+    def f(step):
+        step = step.astype(jnp.float32)
+        wu = jnp.minimum(step / jnp.maximum(warmup, 1), 1.0)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0., 1.)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return lr * wu * jnp.where(step < warmup, 1.0, cos)
+    return f

@@ -1,0 +1,1 @@
+from .fault import (FaultInjector, InjectedFault, StragglerMonitor, ResilientLoop, LoopReport)

@@ -1,0 +1,129 @@
+"""Fault tolerance: failure injection, bounded retry, straggler mitigation.
+
+On a real multi-pod deployment these hooks wrap the per-host train loop;
+here the multi-host behaviour is *simulated* (single process) but the
+control logic — checkpoint/restart cadence, retry budgets, deterministic
+data replay, straggler detection via per-host step-time EMA — is the real
+algorithm and is unit-tested.
+
+* ``FaultInjector``      — deterministic failure schedule for tests.
+* ``ResilientLoop``      — train driver: periodic async checkpoints,
+                           restore-and-replay on failure (data pipeline is
+                           f(step), so replay is exact), bounded retries.
+* ``StragglerMonitor``   — per-host EMA of step times; hosts slower than
+                           ``threshold`` x median are flagged for
+                           re-replication (the scheduler callback decides).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class InjectedFault(RuntimeError):
+    pass
+
+
+class FaultInjector:
+    """Raises InjectedFault at the scheduled steps (each fires once)."""
+
+    def __init__(self, fail_at_steps=()):
+        self.fail_at = set(fail_at_steps)
+        self.fired = set()
+
+    def maybe_fail(self, step: int) -> None:
+        if step in self.fail_at and step not in self.fired:
+            self.fired.add(step)
+            raise InjectedFault(f"injected failure at step {step}")
+
+
+class StragglerMonitor:
+    def __init__(self, n_hosts: int, alpha: float = 0.3,
+                 threshold: float = 1.5):
+        self.ema = np.zeros(n_hosts)
+        self.alpha = alpha
+        self.threshold = threshold
+        self.seen = np.zeros(n_hosts, bool)
+
+    def record(self, host: int, step_time: float) -> None:
+        if not self.seen[host]:
+            self.ema[host] = step_time
+            self.seen[host] = True
+        else:
+            self.ema[host] = (1 - self.alpha) * self.ema[host] \
+                + self.alpha * step_time
+
+    def stragglers(self) -> List[int]:
+        if not self.seen.any():
+            return []
+        med = float(np.median(self.ema[self.seen]))
+        if med <= 0:
+            return []
+        return [int(h) for h in np.nonzero(
+            self.seen & (self.ema > self.threshold * med))[0]]
+
+
+@dataclasses.dataclass
+class LoopReport:
+    steps_run: int
+    restarts: int
+    final_step: int
+    losses: List[float]
+
+
+class ResilientLoop:
+    """Checkpointed train loop with restart-and-replay semantics."""
+
+    def __init__(self, ckpt_manager, data, train_step: Callable,
+                 ckpt_every: int = 10, max_restarts: int = 3,
+                 injector: Optional[FaultInjector] = None,
+                 on_restart: Optional[Callable] = None):
+        self.ckpt = ckpt_manager
+        self.data = data
+        self.train_step = train_step
+        self.ckpt_every = ckpt_every
+        self.max_restarts = max_restarts
+        self.injector = injector
+        self.on_restart = on_restart
+
+    def run(self, state, total_steps: int, to_device=None) -> LoopReport:
+        import jax
+        restarts = 0
+        losses: List[float] = []
+        step = int(np.asarray(state["step"]))
+        while step < total_steps:
+            try:
+                while step < total_steps:
+                    if self.injector is not None:
+                        self.injector.maybe_fail(step)
+                    batch = self.data.batch_at(step)
+                    batch = {k: jax.numpy.asarray(v)
+                             for k, v in batch.items()}
+                    state, metrics = self.train_step(state, batch)
+                    losses.append(float(metrics["loss"]))
+                    step += 1
+                    if step % self.ckpt_every == 0:
+                        self.ckpt.save(step, state)
+            except InjectedFault:
+                restarts += 1
+                if restarts > self.max_restarts:
+                    raise
+                self.ckpt.wait()
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    # no checkpoint yet: restart from scratch is the policy
+                    step = 0
+                    if self.on_restart is not None:
+                        state = self.on_restart(None)
+                    continue
+                restored, step = self.ckpt.restore(
+                    jax.tree.map(lambda x: jax.ShapeDtypeStruct(
+                        x.shape, x.dtype), state), latest)
+                state = (self.on_restart(restored) if self.on_restart
+                         else jax.tree.map(jax.numpy.asarray, restored))
+        self.ckpt.wait()
+        return LoopReport(steps_run=len(losses), restarts=restarts,
+                          final_step=step, losses=losses)

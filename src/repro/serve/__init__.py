@@ -1,0 +1,8 @@
+from .decode import (DecodeSpec, make_decode_spec, make_serve_step,
+                     init_decode_state, abstract_decode_state,
+                     decode_state_shardings)
+from .engine import Engine, Request
+
+__all__ = ["DecodeSpec", "make_decode_spec", "make_serve_step",
+           "init_decode_state", "abstract_decode_state",
+           "decode_state_shardings", "Engine", "Request"]

@@ -1,0 +1,476 @@
+"""SPMD decode step: hybrid-translated paged attention + recurrent states.
+
+Layout (design §5): the KV pool is sharded
+    (L_attn, slots, block_tokens, KV, hd)
+          P(None, DATA,       MODEL, None, None)
+
+* slots over the DATA axes — in **batch mode** each data group owns the
+  sequences (and all their blocks) of its batch shard: every gather is
+  local.  In **striped mode** (long_500k, batch 1) the single sequence's
+  blocks are dealt round-robin over the data groups.
+* block tokens over MODEL — each model shard holds a contiguous token
+  sub-range of every block; partial softmax results are psum-combined
+  (flash-decoding).  This sidesteps GQA-head divisibility entirely
+  (kv_heads never needs to divide the model axis).
+
+Translation (the paper's technique) runs **inside** the shard_map region:
+each data group carries its own TAR/SF/flex-table and resolves its vpns
+with the hybrid RSW before touching pool data — the flexible table is the
+baseline that streams per step; TAR/SF are the compact structures.
+
+Everything outside paged attention (projections, MoE, mamba recurrence,
+lm head) stays in pjit/GSPMD land with sharding constraints.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as Lmod
+from repro.models.transformer import ModelDims
+from repro.models.ssm import MambaCache, mamba_decode_step
+from repro.models.moe import moe_decode
+from repro.core.hashes import get_hash
+from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.kernels.utopia_rsw.ref import rsw_ref
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeSpec:
+    block_size: int              # tokens per KV block (global)
+    max_blocks_per_seq: int      # per data group in striped mode
+    slots_per_group: int
+    n_sets: int
+    assoc: int
+    mode: str = "batch"          # batch | striped
+    hash_name: str = "modulo"
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    use_kernels: bool = False    # Pallas path (TPU); ref path otherwise
+
+    @property
+    def nblk(self) -> int:
+        return self.max_blocks_per_seq
+
+
+def make_decode_spec(cfg: ArchConfig, seq_len: int, batch: int,
+                     data_size: int, mode: str = "batch",
+                     headroom: float = 1.25,
+                     data_axes: Tuple[str, ...] = ("data",)) -> DecodeSpec:
+    bs = cfg.kv_block_size
+    total_blocks = (seq_len + bs - 1) // bs * batch
+    if mode == "batch":
+        blocks_per_group = total_blocks // data_size
+        max_blocks = (seq_len + bs - 1) // bs
+    else:  # striped: one (or few) seqs, blocks dealt over groups
+        blocks_per_group = total_blocks // data_size
+        max_blocks = ((seq_len + bs - 1) // bs) // data_size
+    assoc = 8
+    slots = max(assoc * 2, int(blocks_per_group * headroom))
+    rest = max(assoc, int(slots * 0.75) // assoc * assoc)
+    slots = rest + max(assoc, slots - rest)
+    return DecodeSpec(block_size=bs, max_blocks_per_seq=max_blocks,
+                      slots_per_group=slots, n_sets=rest // assoc,
+                      assoc=assoc, mode=mode, hash_name=cfg.hash_name
+                      if hasattr(cfg, "hash_name") else "modulo",
+                      data_axes=data_axes)
+
+
+# ----------------------------------------------------------- decode state
+
+def abstract_decode_state(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
+                          batch: int, data_size: int,
+                          dtype=jnp.bfloat16) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree of the decode state (dry-run friendly)."""
+    sd = jax.ShapeDtypeStruct
+    G = data_size
+    n_attn = sum(cfg.attn_on_layer(l) for l in range(cfg.num_layers))
+    n_ssm = cfg.num_layers - n_attn if cfg.family in ("hybrid", "ssm") else 0
+    seqs_per_group = max(1, batch // G) if spec.mode == "batch" else batch
+    st: Dict[str, Any] = {}
+    if n_attn:
+        pool = (n_attn, G * spec.slots_per_group, spec.block_size,
+                max(dims.n_kv, 1), dims.head_dim)
+        st["k_pool"] = sd(pool, dtype)
+        st["v_pool"] = sd(pool, dtype)
+        st["tar"] = sd((G, spec.n_sets, spec.assoc), jnp.int32)
+        st["sf"] = sd((G, spec.n_sets), jnp.int32)
+        st["flex"] = sd((G, seqs_per_group * spec.max_blocks_per_seq),
+                        jnp.int32)
+    if n_ssm:
+        md = dims.mamba
+        st["ssm"] = sd((n_ssm, batch, md.n_heads, md.head_dim, md.d_state),
+                       jnp.float32)
+        st["conv"] = sd((n_ssm, batch, md.conv_width - 1, md.conv_channels),
+                        dtype)
+    if cfg.is_encoder_decoder:
+        st["cross_k"] = sd((cfg.num_layers, batch, cfg.frontend_tokens,
+                            dims.n_kv, dims.head_dim), dtype)
+        st["cross_v"] = sd((cfg.num_layers, batch, cfg.frontend_tokens,
+                            dims.n_kv, dims.head_dim), dtype)
+    st["ctx_len"] = sd((batch,), jnp.int32)
+    return st
+
+
+def init_decode_state(cfg, dims, spec, batch, data_size, dtype=jnp.float32):
+    abstract = abstract_decode_state(cfg, dims, spec, batch, data_size, dtype)
+    st = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), abstract)
+    if "flex" in st:
+        st["flex"] = st["flex"] - 1            # -1 = unmapped
+    return st
+
+
+def decode_state_shardings(state_shape, mesh: Mesh, spec: DecodeSpec):
+    da, ma = spec.data_axes, spec.model_axis
+    table = {
+        "k_pool": P(None, da, ma, None, None),
+        "v_pool": P(None, da, ma, None, None),
+        "tar": P(da, None, None),
+        "sf": P(da, None),
+        "flex": P(da, None),
+        "ssm": P(None, da if spec.mode == "batch" else None, ma, None, None),
+        "conv": P(None, da if spec.mode == "batch" else None, None, ma),
+        "cross_k": P(None, da if spec.mode == "batch" else None, None,
+                     None, None),
+        "cross_v": P(None, da if spec.mode == "batch" else None, None,
+                     None, None),
+        "ctx_len": P(),
+    }
+
+    def guard(name, leaf):
+        sp = list(table[name])[:leaf.ndim]
+        sp += [None] * (leaf.ndim - len(sp))
+        out = []
+        for dim, axes in zip(leaf.shape, sp):
+            if axes is None:
+                out.append(None)
+                continue
+            ax = (axes,) if isinstance(axes, str) else tuple(axes)
+            size = int(np.prod([mesh.shape[a] for a in ax]))
+            out.append(axes if dim % size == 0 else None)
+        return NamedSharding(mesh, P(*out))
+
+    return {k: guard(k, v) for k, v in state_shape.items()}
+
+
+# ------------------------------------------------- paged attention (SPMD)
+
+def _paged_attn_shardmap(q, k_new, v_new, k_pool_l, v_pool_l, tar, sf, flex,
+                         ctx_len, pos, *, spec: DecodeSpec, mesh: Mesh,
+                         n_kv: int, head_dim: int):
+    """Run translation + write + attention inside shard_map.
+
+    q: (B, H, hd); k_new/v_new: (B, KV, hd); k/v_pool_l: one layer's pool
+    (G*slots, bs, KV, hd); ctx_len/pos: (B,).
+    Returns (attn_out (B, H, hd) fp32, k_pool_l', v_pool_l').
+    """
+    da, ma = spec.data_axes, spec.model_axis
+    TP = int(np.prod([mesh.shape[a] for a in (ma,)]))
+    G = int(np.prod([mesh.shape[a] for a in da]))
+    bs = spec.block_size
+    bs_loc = bs // TP
+    batch_mode = spec.mode == "batch"
+
+    def local(q, k_new, v_new, kp, vp, tar, sf, flex, ctx, pos):
+        # shapes: q (B_loc, H, hd); kp (slots, bs_loc, KV, hd);
+        # tar (1, n_sets, assoc) -> squeeze group dim
+        tar, sf, flex = tar[0], sf[0], flex[0]
+        m_idx = jax.lax.axis_index(ma)
+        if len(da) == 1:
+            g_idx = jax.lax.axis_index(da[0])
+        else:
+            g_idx = (jax.lax.axis_index(da[0]) * mesh.shape[da[1]]
+                     + jax.lax.axis_index(da[1]))
+        B_loc = q.shape[0]
+        nblk = spec.max_blocks_per_seq
+
+        # ---- translate all blocks of the local sequences (hybrid RSW) ----
+        seq_ids = jnp.arange(B_loc, dtype=jnp.int32)
+        vpns = (seq_ids[:, None] * nblk
+                + jnp.arange(nblk, dtype=jnp.int32)[None, :])   # (B_loc,nblk)
+        slot, in_rest, mapped = rsw_ref(
+            vpns.reshape(-1), tar, sf, flex, hash_name=spec.hash_name)
+        slots = jnp.where(mapped.reshape(B_loc, nblk) > 0,
+                          slot.reshape(B_loc, nblk), -1)
+
+        # ---- write current token's K/V into its block slot --------------
+        if batch_mode:
+            cur_block = pos // bs                                # (B_loc,)
+            blk_owner = jnp.ones_like(pos, dtype=bool)
+        else:
+            cur_block_global = pos // bs
+            blk_owner = (cur_block_global % G) == g_idx
+            cur_block = cur_block_global // G
+        cur_vpn = seq_ids * nblk + cur_block
+        w_slot, w_rest, w_mapped = rsw_ref(cur_vpn, tar, sf, flex,
+                                           hash_name=spec.hash_name)
+        tok = pos % bs
+        own_tok = (tok // bs_loc) == m_idx
+        t_loc = tok % bs_loc
+        own = (w_mapped > 0) & own_tok & blk_owner
+        # unowned rows scatter to an out-of-bounds slot and are DROPPED —
+        # clamping them to slot 0 would collide with a real sequence's
+        # block and clobber its fresh write (duplicate-index scatter)
+        w_target = jnp.where(own, w_slot, kp.shape[0])
+        kp = kp.at[w_target, t_loc].set(k_new.astype(kp.dtype),
+                                        mode="drop")
+        vp = vp.at[w_target, t_loc].set(v_new.astype(vp.dtype),
+                                        mode="drop")
+
+        # ---- paged attention over translated blocks ---------------------
+        if batch_mode:
+            block_tokens = bs
+            tok_offset = m_idx * bs_loc
+        else:
+            block_tokens = G * bs
+            tok_offset = g_idx * bs + m_idx * bs_loc
+        o, m, l = paged_attention_ref(
+            q, kp, vp, slots, ctx + 1, tok_offset=tok_offset, tok_stride=1,
+            block_tokens=block_tokens)
+        combine = (ma,) if batch_mode else tuple(da) + (ma,)
+        m_glob = jax.lax.pmax(m, combine)
+        corr = jnp.exp(m - m_glob)
+        o = jax.lax.psum(o * corr[..., None], combine)
+        l = jax.lax.psum(l * corr, combine)
+        out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+        return out, kp, vp
+
+    dspec = P(da) if batch_mode else P()
+    in_specs = (
+        P(da, None, None) if batch_mode else P(None, None, None),  # q
+        P(da, None, None) if batch_mode else P(None, None, None),  # k_new
+        P(da, None, None) if batch_mode else P(None, None, None),  # v_new
+        P(da, ma, None, None),                                     # k_pool
+        P(da, ma, None, None),                                     # v_pool
+        P(da, None, None),                                         # tar
+        P(da, None),                                               # sf
+        P(da, None),                                               # flex
+        dspec, dspec,                                              # ctx, pos
+    )
+    out_specs = (
+        P(da, None, None) if batch_mode else P(None, None, None),
+        P(da, ma, None, None),
+        P(da, ma, None, None),
+    )
+    fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
+                       out_specs=out_specs, check_vma=False)
+    return fn(q, k_new, v_new, k_pool_l, v_pool_l, tar, sf, flex,
+              ctx_len, pos)
+
+
+# --------------------------------------------------------- full serve step
+
+def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
+                    mesh: Optional[Mesh] = None, pins=Lmod.no_pins,
+                    dtype=jnp.bfloat16):
+    """Returns serve_step(params, dstate, tokens (B,), ) ->
+    (logits (B, V), new dstate).  One new token per live sequence."""
+
+    def qkv_decode(blk, x, positions):
+        B = x.shape[0]
+        h = Lmod.rms_norm(x, blk["norm1"].astype(jnp.float32), cfg.norm_eps)
+        q = Lmod.linear(blk["attn"]["q"], h).reshape(B, dims.n_heads,
+                                                     dims.head_dim)
+        k = Lmod.linear(blk["attn"]["k"], h).reshape(B, dims.n_kv,
+                                                     dims.head_dim)
+        v = Lmod.linear(blk["attn"]["v"], h).reshape(B, dims.n_kv,
+                                                     dims.head_dim)
+        if cfg.rope_theta > 0:
+            q = Lmod.apply_rope(q[:, None], positions[:, None],
+                                cfg.rope_theta)[:, 0]
+            k = Lmod.apply_rope(k[:, None], positions[:, None],
+                                cfg.rope_theta)[:, 0]
+        return q, k, v
+
+    def attn_sublayer(blk, x, kp_l, vp_l, dstate, positions):
+        B = x.shape[0]
+        q, k, v = qkv_decode(blk, x, positions)
+        if mesh is not None:
+            out, kp_l, vp_l = _paged_attn_shardmap(
+                q, k, v, kp_l, vp_l, dstate["tar"], dstate["sf"],
+                dstate["flex"], dstate["ctx_len"], positions,
+                spec=spec, mesh=mesh, n_kv=dims.n_kv, head_dim=dims.head_dim)
+        else:
+            out, kp_l, vp_l = _paged_attn_local_ref(
+                q, k, v, kp_l, vp_l, dstate, positions, spec)
+        o = Lmod.linear(blk["attn"]["o"], out.reshape(B, -1).astype(x.dtype))
+        return x + pins("dec_bd", o), kp_l, vp_l
+
+    def ffn_sublayer(blk, x):
+        h = Lmod.rms_norm(x, blk["norm2"].astype(jnp.float32), cfg.norm_eps)
+        if "moe" in blk:
+            out = moe_decode(blk["moe"], h, top_k=cfg.moe_top_k, pins=pins)
+        else:
+            out = Lmod.mlp(blk["mlp"], h, pins)
+        return x + pins("dec_bd", out)
+
+    def mamba_sublayer(blk, x, ssm, conv):
+        h = Lmod.rms_norm(x, blk["norm1"].astype(jnp.float32), cfg.norm_eps)
+        out, cache = mamba_decode_step(
+            blk["mamba"], h, MambaCache(conv=conv, state=ssm), dims.mamba)
+        return x + pins("dec_bd", out), cache.state, cache.conv
+
+    def cross_sublayer(blk, x, ck, cv, ctx_valid):
+        B = x.shape[0]
+        h = Lmod.rms_norm(x, blk["norm_x"].astype(jnp.float32), cfg.norm_eps)
+        q = Lmod.linear(blk["cross"]["q"], h).reshape(B, dims.n_heads,
+                                                      dims.head_dim)
+        g = dims.n_heads // dims.n_kv
+        qf = q.reshape(B, dims.n_kv, g, dims.head_dim).astype(jnp.float32)
+        s = jnp.einsum("bkgd,bfkd->bkgf", qf, ck.astype(jnp.float32))
+        s = s / math.sqrt(dims.head_dim)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgf,bfkd->bkgd", p, cv.astype(jnp.float32))
+        o = o.reshape(B, -1).astype(x.dtype)
+        return x + pins("dec_bd", Lmod.linear(blk["cross"]["o"], o))
+
+    def serve_step(params, dstate, tokens):
+        positions = dstate["ctx_len"]
+        x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
+        x = pins("dec_bd", x)
+        fam = cfg.family
+        new_state = dict(dstate)
+
+        n_layers = cfg.num_layers
+        if fam in ("dense", "moe", "vlm", "audio"):
+            # KV pools ride in the scan CARRY with per-layer in-place
+            # dynamic updates (single live buffer; xs/ys would double-buffer
+            # the multi-TB pool)
+            xs = {"blk": params["layers"],
+                  "idx": jnp.arange(n_layers, dtype=jnp.int32)}
+            if fam == "audio":
+                xs["ck"] = dstate["cross_k"]
+                xs["cv"] = dstate["cross_v"]
+
+            def body(carry, xl):
+                x, kp, vp = carry
+                blk = xl["blk"]
+                i = xl["idx"]
+                kp_l = jax.lax.dynamic_index_in_dim(kp, i, 0, keepdims=False)
+                vp_l = jax.lax.dynamic_index_in_dim(vp, i, 0, keepdims=False)
+                x, kp_l, vp_l = attn_sublayer(blk, x, kp_l, vp_l,
+                                              dstate, positions)
+                kp = jax.lax.dynamic_update_index_in_dim(kp, kp_l, i, 0)
+                vp = jax.lax.dynamic_update_index_in_dim(vp, vp_l, i, 0)
+                if fam == "audio":
+                    x = cross_sublayer(blk, x, xl["ck"], xl["cv"], None)
+                x = ffn_sublayer(blk, x)
+                return (x, kp, vp), None
+
+            (x, kp, vp), _ = jax.lax.scan(
+                body, (x, dstate["k_pool"], dstate["v_pool"]), xs)
+            new_state["k_pool"], new_state["v_pool"] = kp, vp
+        elif fam == "ssm":
+            xs = {"blk": params["layers"], "ssm": dstate["ssm"],
+                  "conv": dstate["conv"]}
+
+            def body(x, xl):
+                x, s, c = mamba_sublayer(xl["blk"], x, xl["ssm"], xl["conv"])
+                return x, {"ssm": s, "conv": c}
+
+            x, ys = jax.lax.scan(body, x, xs)
+            new_state["ssm"], new_state["conv"] = ys["ssm"], ys["conv"]
+        elif fam == "hybrid":
+            g = cfg.attn_every
+            n_groups = cfg.num_layers // g
+            n_mamba = g - 1
+            xs = {"blk": params["layers"],
+                  "idx": jnp.arange(n_groups, dtype=jnp.int32),
+                  "ssm": dstate["ssm"].reshape(
+                      (n_groups, n_mamba) + dstate["ssm"].shape[1:]),
+                  "conv": dstate["conv"].reshape(
+                      (n_groups, n_mamba) + dstate["conv"].shape[1:])}
+
+            def body(carry, xl):
+                x, kp, vp = carry
+                blk = xl["blk"]
+                gi = xl["idx"]
+                ssm_out, conv_out = [], []
+                for i in range(g):
+                    if i < g - 1:
+                        sub = jax.tree.map(lambda a, i=i: a[i], blk["mamba"])
+                        x, s, c = mamba_sublayer(sub, x, xl["ssm"][i],
+                                                 xl["conv"][i])
+                        ssm_out.append(s)
+                        conv_out.append(c)
+                    else:
+                        kp_l = jax.lax.dynamic_index_in_dim(
+                            kp, gi, 0, keepdims=False)
+                        vp_l = jax.lax.dynamic_index_in_dim(
+                            vp, gi, 0, keepdims=False)
+                        x, kp_l, vp_l = attn_sublayer(
+                            blk["attn"], x, kp_l, vp_l, dstate, positions)
+                        kp = jax.lax.dynamic_update_index_in_dim(
+                            kp, kp_l, gi, 0)
+                        vp = jax.lax.dynamic_update_index_in_dim(
+                            vp, vp_l, gi, 0)
+                    n_moe_before = sum(cfg.moe_on_layer(j) for j in range(i))
+                    if cfg.moe_on_layer(i):
+                        sub = jax.tree.map(lambda a, j=n_moe_before: a[j],
+                                           blk["moe"])
+                    else:
+                        j = i - n_moe_before
+                        sub = jax.tree.map(lambda a, j=j: a[j], blk["mlp"])
+                    x = ffn_sublayer(sub, x)
+                return (x, kp, vp), {"ssm": jnp.stack(ssm_out),
+                                     "conv": jnp.stack(conv_out)}
+
+            (x, kp, vp), ys = jax.lax.scan(
+                body, (x, dstate["k_pool"], dstate["v_pool"]), xs)
+            new_state["k_pool"], new_state["v_pool"] = kp, vp
+            new_state["ssm"] = ys["ssm"].reshape(dstate["ssm"].shape)
+            new_state["conv"] = ys["conv"].reshape(dstate["conv"].shape)
+        else:
+            raise ValueError(fam)
+
+        x = Lmod.rms_norm(x, params["final_norm"].astype(jnp.float32),
+                          cfg.norm_eps)
+        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+        logits = x @ head["table"].T.astype(x.dtype)
+        vpad = logits.shape[-1]
+        if vpad > dims.logical_vocab:
+            mask = jnp.arange(vpad) < dims.logical_vocab
+            logits = jnp.where(mask, logits, jnp.asarray(-1e9, logits.dtype))
+        logits = pins("dec_logits", logits)
+        new_state["ctx_len"] = dstate["ctx_len"] + 1
+        return logits, new_state
+
+    return serve_step
+
+
+# ------------------------------------------------ single-device reference
+
+def _paged_attn_local_ref(q, k_new, v_new, kp_l, vp_l, dstate, pos,
+                          spec: DecodeSpec):
+    """Mesh-free reference used by the engine on one device (G=1, TP=1)."""
+    tar, sf, flex = dstate["tar"][0], dstate["sf"][0], dstate["flex"][0]
+    B = q.shape[0]
+    nblk = spec.max_blocks_per_seq
+    bs = spec.block_size
+    seq_ids = jnp.arange(B, dtype=jnp.int32)
+    vpns = (seq_ids[:, None] * nblk
+            + jnp.arange(nblk, dtype=jnp.int32)[None, :])
+    slot, in_rest, mapped = rsw_ref(vpns.reshape(-1), tar, sf, flex,
+                                    hash_name=spec.hash_name)
+    slots = jnp.where(mapped.reshape(B, nblk) > 0,
+                      slot.reshape(B, nblk), -1)
+    cur_vpn = seq_ids * nblk + pos // bs
+    w_slot, _, w_mapped = rsw_ref(cur_vpn, tar, sf, flex,
+                                  hash_name=spec.hash_name)
+    t = pos % bs
+    own = w_mapped > 0
+    ws = jnp.where(own, w_slot, kp_l.shape[0])   # unowned -> dropped
+    kp_l = kp_l.at[ws, t].set(k_new.astype(kp_l.dtype), mode="drop")
+    vp_l = vp_l.at[ws, t].set(v_new.astype(vp_l.dtype), mode="drop")
+    o, m, l = paged_attention_ref(q, kp_l, vp_l, slots,
+                                  dstate["ctx_len"] + 1)
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out, kp_l, vp_l

@@ -1,0 +1,230 @@
+"""Continuous-batching serving engine over the hybrid-translated KV pool.
+
+The engine is the "operating system" of the serving stack (paper §5.6):
+
+* admission: prefill a prompt, allocate its KV blocks fault-based (straight
+  into the RestSeg), install K/V into the pool slots the manager assigned;
+* steady state: every decode step (i) allocates the current block when a
+  sequence crosses a block boundary, (ii) uploads the (tiny) TAR/SF deltas
+  + flex table, (iii) runs the jitted serve_step, (iv) feeds translation
+  stats back to the manager (PTW-cost tracking), (v) applies any pending
+  slot-to-slot migrations (the DMA page copies of Fig. 16);
+* prefix sharing between requests with a common prompt prefix (FlexSeg
+  refcounts — the paper's inter-process page sharing);
+* eviction/swap: pool exhaustion surfaces as swap events exactly as in the
+  restrictive-only experiment (Fig. 9).
+
+Single-host configuration (G = 1 data group); the SPMD decode step in
+serve/decode.py is the same code the launcher shards across a pod.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core import HybridConfig, HybridKVManager
+from repro.models import FwdOptions, forward, model_dims
+from repro.models.transformer import ModelDims
+from .decode import (DecodeSpec, make_serve_step, init_decode_state,
+                     make_decode_spec)
+
+
+@dataclasses.dataclass
+class Request:
+    seq_id: int
+    prompt: np.ndarray
+    frontend: Optional[np.ndarray] = None
+    max_new_tokens: int = 16
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
+                 max_seq_len: int = 256, pool_headroom: float = 1.25,
+                 mode: str = "hybrid", attn_impl: str = "dense",
+                 dtype=jnp.float32, restseg_fraction: float = 0.75,
+                 track_stats: bool = True):
+        self.cfg = cfg
+        self.dims = model_dims(cfg, tp=1)
+        self.params = params
+        bs = cfg.kv_block_size
+        max_blocks = max_seq_len // bs
+        self.hybrid_cfg = HybridConfig(
+            block_size=bs,
+            total_slots=max(16, int(max_batch * max_blocks * pool_headroom)
+                            // 8 * 8),
+            restseg_fraction=restseg_fraction, assoc=8,
+            max_seqs=max_batch, max_blocks_per_seq=max_blocks, mode=mode)
+        self.track_stats = track_stats
+        self.manager = HybridKVManager(self.hybrid_cfg)
+        self.spec = DecodeSpec(
+            block_size=bs, max_blocks_per_seq=max_blocks,
+            slots_per_group=self.hybrid_cfg.total_slots,
+            n_sets=self.hybrid_cfg.num_sets, assoc=self.hybrid_cfg.assoc,
+            mode="batch", hash_name=self.hybrid_cfg.hash_name)
+        self.dstate = init_decode_state(cfg, self.dims, self.spec,
+                                        max_batch, 1, dtype=dtype)
+        self.max_batch = max_batch
+        self.fwd = FwdOptions(attn_impl=attn_impl, dtype=dtype,
+                              collect_cache=True)
+        self._serve_step = jax.jit(make_serve_step(
+            cfg, self.dims, self.spec, mesh=None, dtype=dtype))
+        self.requests: Dict[int, Request] = {}
+        self._slot_of: Dict[int, int] = {}
+        self._n_attn_layers = sum(cfg.attn_on_layer(l)
+                                  for l in range(cfg.num_layers))
+
+    # ------------------------------------------------------------ admission
+    def add_request(self, req: Request,
+                    share_prefix_from: Optional[int] = None,
+                    shared_blocks: int = 0) -> int:
+        m = self.manager
+        slot = m.register_sequence(req.seq_id)
+        self._slot_of[req.seq_id] = slot
+        self.requests[req.seq_id] = req
+        bs = self.cfg.kv_block_size
+        prompt = np.asarray(req.prompt)
+        S = len(prompt)
+        if S % bs:
+            raise ValueError(f"prompt length {S} must be a multiple of the "
+                             f"KV block size {bs} (pad upstream)")
+        if share_prefix_from is not None and shared_blocks:
+            m.share_prefix(share_prefix_from, req.seq_id, shared_blocks)
+            # drain migration copies NOW: the freed RestSeg slots may be
+            # reallocated by the prefill below, and a stale deferred copy
+            # would then clobber the shared slot (ordering invariant:
+            # copies apply before any further pool mutation)
+            self._apply_copies()
+
+        # ---- prefill forward: logits + caches ----
+        batch = {"tokens": jnp.asarray(prompt)[None, :]}
+        if req.frontend is not None:
+            batch["frontend"] = jnp.asarray(req.frontend)[None]
+        logits, _, caches = forward(self.params, batch, self.cfg, self.dims,
+                                    self.fwd)
+        # ---- install attention KV blocks (vlm: includes image prefix) ----
+        if self._n_attn_layers and caches.get("k") is not None:
+            k = caches["k"]            # (L_attn, 1, S_total, KV, hd)
+            v = caches["v"]
+            S_inst = k.shape[2]
+            if S_inst % bs:
+                raise ValueError(f"cache length {S_inst} (prompt+prefix) "
+                                 f"must divide block size {bs}")
+            nblk = S_inst // bs
+            k = k.reshape(k.shape[0], nblk, bs, k.shape[3], k.shape[4])
+            v = v.reshape(v.shape[0], nblk, bs, v.shape[3], v.shape[4])
+            slots = []
+            for b in range(nblk):
+                info = m.allocate_block(req.seq_id, b)
+                if info.seg == 2:       # SWAP: pool exhausted
+                    raise RuntimeError("pool exhausted during prefill")
+                slots.append(info.slot)
+            # allocation-time evictions queued copies: drain before scatter
+            self._apply_copies()
+            slots = jnp.asarray(slots, jnp.int32)
+            self.dstate["k_pool"] = self.dstate["k_pool"].at[:, slots].set(
+                k.astype(self.dstate["k_pool"].dtype))
+            self.dstate["v_pool"] = self.dstate["v_pool"].at[:, slots].set(
+                v.astype(self.dstate["v_pool"].dtype))
+        # ---- install recurrent caches ----
+        if "ssm" in caches and caches["ssm"] is not None:
+            ssm = caches["ssm"]
+            conv = ssm.conv if hasattr(ssm, "conv") else None
+            state = ssm.state if hasattr(ssm, "state") else ssm
+            st = state.reshape((-1,) + state.shape[-4:])
+            cv = conv.reshape((-1,) + conv.shape[-3:])
+            self.dstate["ssm"] = self.dstate["ssm"].at[:, slot].set(st[:, 0])
+            self.dstate["conv"] = self.dstate["conv"].at[:, slot].set(
+                cv[:, 0].astype(self.dstate["conv"].dtype))
+        if self.cfg.is_encoder_decoder:
+            self.dstate["cross_k"] = self.dstate["cross_k"].at[:, slot].set(
+                caches["ck"][:, 0].astype(self.dstate["cross_k"].dtype))
+            self.dstate["cross_v"] = self.dstate["cross_v"].at[:, slot].set(
+                caches["cv"][:, 0].astype(self.dstate["cross_v"].dtype))
+        ctx0 = S + (self.cfg.frontend_tokens if self.cfg.family == "vlm"
+                    else 0)
+        self.dstate["ctx_len"] = self.dstate["ctx_len"].at[slot].set(ctx0)
+        # first generated token from prefill logits
+        nxt = int(jnp.argmax(logits[0, -1]))
+        req.generated.append(nxt)
+        self._sync_translation()
+        return slot
+
+    # ------------------------------------------------------------- serving
+    def _sync_translation(self) -> None:
+        m = self.manager
+        self.dstate["tar"] = jnp.asarray(m.tar)[None]
+        self.dstate["sf"] = jnp.asarray(m.sf)[None]
+        self.dstate["flex"] = jnp.asarray(m.flex_table.reshape(-1))[None]
+
+    def _apply_copies(self) -> None:
+        copies = self.manager.take_pending_copies()
+        for src, dst in copies:
+            self.dstate["k_pool"] = self.dstate["k_pool"].at[:, dst].set(
+                self.dstate["k_pool"][:, src])
+            self.dstate["v_pool"] = self.dstate["v_pool"].at[:, dst].set(
+                self.dstate["v_pool"][:, src])
+
+    def step(self) -> Dict[int, int]:
+        """One decode step for all live sequences."""
+        live = [r for r in self.requests.values() if not r.done]
+        if not live:
+            return {}
+        m = self.manager
+        bs = self.cfg.kv_block_size
+        # allocate current blocks at boundaries; gather last tokens
+        tokens = np.zeros(self.max_batch, np.int64)
+        for r in live:
+            slot = self._slot_of[r.seq_id]
+            pos = int(self.dstate["ctx_len"][slot])
+            if self._n_attn_layers and pos % bs == 0:
+                info = m.allocate_block(r.seq_id, pos // bs)
+                if info.seg == 2:
+                    info = m.swap_in(r.seq_id, pos // bs)
+            tokens[slot] = r.generated[-1]
+        self._apply_copies()
+        self._sync_translation()
+
+        logits, self.dstate = self._serve_step(
+            self.params, self.dstate, jnp.asarray(tokens))
+
+        # feed translation stats back (PTW-cost tracking) + promotions
+        if self._n_attn_layers and self.track_stats:
+            from repro.core import translate
+            ts = m.device_state()
+            for r in live:
+                slot = self._slot_of[r.seq_id]
+                pos = int(self.dstate["ctx_len"][slot])
+                nblk = (pos + bs - 1) // bs
+                vpns = np.array([m.cfg.vpn(slot, b) for b in range(nblk)])
+                res = translate(ts, jnp.asarray(vpns, jnp.int32))
+                m.record_device_stats(vpns, np.asarray(res.in_rest),
+                                      np.asarray(res.accesses))
+            m.run_promotions()
+            self._apply_copies()
+
+        out = {}
+        for r in live:
+            slot = self._slot_of[r.seq_id]
+            nxt = int(jnp.argmax(logits[slot]))
+            r.generated.append(nxt)
+            out[r.seq_id] = nxt
+            if len(r.generated) >= r.max_new_tokens:
+                r.done = True
+        return out
+
+    def release(self, seq_id: int) -> None:
+        self.manager.free_sequence(seq_id)
+        slot = self._slot_of.pop(seq_id)
+        self.dstate["ctx_len"] = self.dstate["ctx_len"].at[slot].set(0)
+        self.requests.pop(seq_id, None)
+        self._sync_translation()
+
+    def stats(self) -> dict:
+        return dict(self.manager.stats)

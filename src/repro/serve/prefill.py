@@ -1,0 +1,107 @@
+"""SPMD prefill step: forward + install caches into the hybrid KV pool.
+
+The prompt's K/V are computed by the training-style forward (chunked flash
+attention), then scattered into the pool slots the manager translated
+(``slots`` input, produced host-side by fault-based allocation).  The
+scatter runs inside shard_map so every write is local to the (data-group,
+token-shard) that owns the slot — the cache is resharded once
+(nblk-split -> block-token-split all-to-all) which the roofline's
+collective term accounts for.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import FwdOptions, forward
+from repro.models.layers import no_pins
+from repro.models.transformer import ModelDims
+from .decode import DecodeSpec
+
+
+def _scatter_pool(pool, cache, slots, mesh: Mesh, spec: DecodeSpec):
+    """pool (L, G*slots, bs, KV, hd)  P(None, da, ma, None, None)
+    cache (L, B, nblk, bs, KV, hd)    P(None, da, None, ma, None, None)
+    slots (B, nblk) int32             P(da, None)
+    """
+    da, ma = spec.data_axes, spec.model_axis
+
+    def local(pool, cache, slots):
+        L = pool.shape[0]
+        Bl, nblk = slots.shape
+        flat = cache.reshape(L, Bl * nblk, *cache.shape[3:])
+        sl = slots.reshape(-1)
+        idx = jnp.where(sl >= 0, sl, pool.shape[1])  # invalid -> dropped
+        return pool.at[:, idx].set(flat.astype(pool.dtype), mode="drop")
+
+    fn = jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(P(None, da, ma, None, None),
+                  P(None, da, None, ma, None, None),
+                  P(da, None)),
+        out_specs=P(None, da, ma, None, None),
+        check_vma=False)
+    return fn(pool, cache, slots)
+
+
+def make_prefill_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
+                      mesh: Optional[Mesh] = None, pins=no_pins,
+                      fwd: FwdOptions = FwdOptions()):
+    """Returns prefill_step(params, dstate, batch, slots) ->
+    (last_logits (B, V), new dstate)."""
+    fwd_collect = FwdOptions(**{**fwd.__dict__, "collect_cache": True})
+
+    def prefill_step(params, dstate, batch, slots):
+        logits, aux, caches = forward(params, batch, cfg, dims, fwd_collect,
+                                      pins)
+        new_state = dict(dstate)
+        S = batch["tokens"].shape[1]
+        B = batch["tokens"].shape[0]
+        ctx = S + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+
+        if caches.get("k") is not None and "k_pool" in dstate:
+            k, v = caches["k"], caches["v"]          # (L_attn, B, S_tot, KV, hd)
+            L, _, S_tot, KV, hd = k.shape
+            bs = spec.block_size
+            nblk = S_tot // bs
+            k = k.reshape(L, B, nblk, bs, KV, hd)
+            v = v.reshape(L, B, nblk, bs, KV, hd)
+            if mesh is not None:
+                con = NamedSharding(mesh, P(None, spec.data_axes, None,
+                                            spec.model_axis, None, None))
+                k = jax.lax.with_sharding_constraint(k, con)
+                v = jax.lax.with_sharding_constraint(v, con)
+                new_state["k_pool"] = _scatter_pool(
+                    dstate["k_pool"], k, slots, mesh, spec)
+                new_state["v_pool"] = _scatter_pool(
+                    dstate["v_pool"], v, slots, mesh, spec)
+            else:
+                idx = jnp.maximum(slots.reshape(-1), 0)
+                new_state["k_pool"] = dstate["k_pool"].at[:, idx].set(
+                    k.reshape(L, B * nblk, bs, KV, hd
+                              ).astype(dstate["k_pool"].dtype))
+                new_state["v_pool"] = dstate["v_pool"].at[:, idx].set(
+                    v.reshape(L, B * nblk, bs, KV, hd
+                              ).astype(dstate["v_pool"].dtype))
+
+        if "ssm" in dstate and caches.get("ssm") is not None:
+            mc = caches["ssm"]
+            state = mc.state if hasattr(mc, "state") else mc
+            conv = mc.conv if hasattr(mc, "conv") else None
+            new_state["ssm"] = state.reshape(dstate["ssm"].shape)
+            new_state["conv"] = conv.reshape(dstate["conv"].shape).astype(
+                dstate["conv"].dtype)
+        if cfg.is_encoder_decoder and "cross_k" in dstate:
+            new_state["cross_k"] = caches["ck"].astype(
+                dstate["cross_k"].dtype)
+            new_state["cross_v"] = caches["cv"].astype(
+                dstate["cross_v"].dtype)
+        new_state["ctx_len"] = jnp.full_like(dstate["ctx_len"], ctx)
+        return logits[:, -1], new_state
+
+    return prefill_step

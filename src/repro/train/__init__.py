@@ -1,0 +1,1 @@
+from .trainer import (TrainConfig, make_train_step, init_state, abstract_state, state_shardings, make_schedule)

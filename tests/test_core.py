@@ -1,0 +1,220 @@
+"""Core hybrid-translation unit tests (paper mechanics)."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import (HybridConfig, HybridKVManager, RestSegConfig,
+                        FlexSegConfig, translate, rsw, init_restseg, insert,
+                        remove, ElasticCuckooTable, POMTLB, RadixBuilder,
+                        translate_radix, translate_ech, translate_pom,
+                        get_hash, HASHES, REST, FLEX, SWAP)
+
+
+def make_manager(**kw):
+    cfg = HybridConfig(total_slots=kw.pop("total_slots", 128),
+                       restseg_fraction=kw.pop("restseg_fraction", 0.75),
+                       assoc=kw.pop("assoc", 4),
+                       max_seqs=kw.pop("max_seqs", 8),
+                       max_blocks_per_seq=kw.pop("max_blocks_per_seq", 32),
+                       **kw)
+    return HybridKVManager(cfg)
+
+
+class TestSegments:
+    def test_geometry(self):
+        cfg = HybridConfig(total_slots=128, restseg_fraction=0.75, assoc=8)
+        assert cfg.rest_slots % cfg.assoc == 0
+        assert cfg.rest_slots + cfg.flex_slots == 128
+        assert cfg.num_sets == cfg.rest_slots // 8
+
+    def test_structure_sizes_scale(self):
+        """Fig. 13: TAR+SF should be far smaller than the radix table."""
+        for num_blocks in (1 << 10, 1 << 14, 1 << 18):
+            rs = RestSegConfig(num_slots=num_blocks, assoc=8)
+            fx = FlexSegConfig(num_slots=num_blocks)
+            compact = rs.tar_bytes() + rs.sf_bytes()
+            radix = fx.table_bytes(num_blocks)
+            assert compact < radix, (num_blocks, compact, radix)
+
+    def test_mode_validation(self):
+        with pytest.raises(ValueError):
+            HybridConfig(mode="bogus")
+
+
+class TestHashes:
+    @pytest.mark.parametrize("name", sorted(HASHES))
+    def test_domains_agree(self, name):
+        """python ints, numpy arrays and jnp arrays must agree bit-for-bit."""
+        h = get_hash(name)
+        n_sets = 96
+        vpns = np.arange(0, 20000, 7, dtype=np.int32)
+        a = np.array([h(int(v), n_sets) for v in vpns])
+        b = np.asarray(h(vpns, n_sets))
+        c = np.asarray(h(jnp.asarray(vpns), n_sets))
+        np.testing.assert_array_equal(a, b)
+        np.testing.assert_array_equal(b, c)
+        assert (a >= 0).all() and (a < n_sets).all()
+
+
+class TestTarSf:
+    def test_insert_rsw_remove(self):
+        st = init_restseg(8, 2)
+        st = insert(st, 5, 0)
+        st = insert(st, 13, 1)     # 13 % 8 == 5: same set, way 1
+        res = rsw(st, jnp.array([5, 13, 21], jnp.int32))
+        assert list(np.asarray(res.hit)) == [True, True, False]
+        assert int(res.slot[0]) == 5 * 2 and int(res.slot[1]) == 5 * 2 + 1
+        assert int(st.sf[5]) == 2
+        st = remove(st, 5)
+        res = rsw(st, jnp.array([5, 13], jnp.int32))
+        assert list(np.asarray(res.hit)) == [False, True]
+
+    def test_sf_skips_empty_sets(self):
+        st = init_restseg(8, 2)
+        res = rsw(st, jnp.arange(8, dtype=jnp.int32))
+        assert bool(res.sf_skipped.all())
+        assert int(res.tar_touched.sum()) == 0
+
+
+class TestManager:
+    def test_fault_based_alloc_prefers_restseg(self):
+        m = make_manager()
+        m.register_sequence(0)
+        infos = [m.allocate_block(0, b) for b in range(16)]
+        assert all(i.seg == REST for i in infos)
+        m.check_invariants()
+
+    def test_eviction_migrates_to_flex_not_swap(self):
+        m = make_manager(total_slots=32, restseg_fraction=0.5, assoc=2,
+                         max_seqs=8, max_blocks_per_seq=64)
+        m.register_sequence(0)
+        for b in range(24):
+            m.allocate_block(0, b)
+        m.check_invariants()
+        assert m.stats["migrations_rest_to_flex"] > 0 or \
+            m.stats["flex_allocs"] > 0
+        assert m.stats["swap_out"] == 0   # flexible space absorbed conflicts
+
+    def test_restrictive_only_swaps(self):
+        """Fig. 9: without a FlexSeg, conflicts hit the swap space."""
+        m = make_manager(total_slots=16, restseg_fraction=1.0, assoc=2,
+                         max_seqs=8, max_blocks_per_seq=64,
+                         mode="restrictive_only")
+        m.register_sequence(0)
+        for b in range(40):
+            m.allocate_block(0, b)
+        assert m.stats["swap_out"] > 0
+        m.check_invariants()
+
+    def test_flexible_only_never_uses_rest(self):
+        m = make_manager(mode="flexible_only")
+        m.register_sequence(0)
+        infos = [m.allocate_block(0, b) for b in range(16)]
+        assert all(i.seg == FLEX for i in infos)
+
+    def test_sharing_requires_flex_and_refcounts(self):
+        m = make_manager()
+        for s in (0, 1):
+            m.register_sequence(s)
+        for b in range(8):
+            m.allocate_block(0, b)
+        shared = m.share_prefix(0, 1, 4)
+        assert shared == 4
+        for b in range(4):
+            s0, seg0 = m.lookup(0, b)
+            s1, seg1 = m.lookup(1, b)
+            assert s0 == s1 and seg0 == FLEX == seg1  # migrated out of rest
+        m.free_sequence(0)
+        m.check_invariants()
+        for b in range(4):
+            assert m.lookup(1, b)[0] >= 0   # survivor keeps the slot
+        m.free_sequence(1)
+        m.check_invariants()
+        assert not m.blocks
+
+    def test_promotion_via_cost_tracking(self):
+        m = make_manager(total_slots=64, restseg_fraction=0.125, assoc=2,
+                         max_seqs=4, max_blocks_per_seq=16,
+                         alloc_evicts=False)
+        m.register_sequence(0)
+        # the 8-slot restseg fills; later blocks land in flex
+        infos = [m.allocate_block(0, b) for b in range(16)]
+        flex_vpns = [i.vpn for i in infos if i.seg == FLEX]
+        assert flex_vpns, "expected some flex blocks"
+        vpn = flex_vpns[0]
+        for _ in range(6):
+            m.record_device_stats(np.array([vpn]), np.array([False]),
+                                  np.array([4]))
+        n = m.run_promotions()
+        assert n >= 1
+        assert m.blocks[vpn].seg == REST
+        assert m.stats["migrations_flex_to_rest"] >= 1
+        m.check_invariants()
+
+    def test_device_host_agreement(self):
+        m = make_manager()
+        for s in range(4):
+            m.register_sequence(s)
+            for b in range(20):
+                m.allocate_block(s, b)
+        ts = m.device_state()
+        for s in range(4):
+            for b in range(20):
+                vpn = m.cfg.vpn(m.seq_slot(s), b)
+                res = translate(ts, jnp.array([vpn], jnp.int32))
+                host_slot, _ = m.lookup(s, b)
+                assert int(res.slot[0]) == host_slot
+
+    def test_swap_in_roundtrip(self):
+        m = make_manager(total_slots=8, restseg_fraction=1.0, assoc=2,
+                         max_seqs=4, max_blocks_per_seq=32,
+                         mode="restrictive_only")
+        m.register_sequence(0)
+        for b in range(16):
+            m.allocate_block(0, b)
+        swapped = [vpn for vpn, i in m.blocks.items() if i.seg == SWAP]
+        assert swapped
+        b = swapped[0] % 32
+        info = m.swap_in(0, b)
+        assert info.seg != SWAP
+        assert m.stats["swap_in"] == 1
+
+
+class TestBaselines:
+    def test_radix_walk(self):
+        rb = RadixBuilder(num_levels=4, fanout=8)
+        pairs = [(i * 37 % 4000, i) for i in range(200)]
+        for vpn, slot in pairs:
+            rb.map(vpn, slot)
+        tab = rb.device_table()
+        vpns = jnp.array([p[0] for p in pairs], jnp.int32)
+        slot, ok, acc = tab.walk(vpns)
+        assert bool(ok.all())
+        np.testing.assert_array_equal(np.asarray(slot),
+                                      [p[1] for p in pairs])
+        assert int(acc[0]) == 4          # four serial accesses
+        slot, ok, _ = tab.walk(jnp.array([3999], jnp.int32))
+        assert not bool(ok[0]) or int(slot[0]) == dict(pairs).get(3999, -1)
+
+    def test_ech_insert_lookup_resize(self):
+        t = ElasticCuckooTable(capacity=16, n_tables=4)
+        for vpn in range(100):
+            t.insert(vpn, vpn * 2)
+        assert t.resizes >= 1
+        st = t.device_state()
+        slot, hit, acc = st.lookup(jnp.arange(100, dtype=jnp.int32))
+        assert bool(hit.all())
+        np.testing.assert_array_equal(np.asarray(slot),
+                                      np.arange(100) * 2)
+        assert int(acc[0]) == 4          # n parallel probes (paper Fig. 5)
+
+    def test_pom_tlb_hit_path(self):
+        pom = POMTLB(entries=64, ways=4)
+        for vpn in range(32):
+            pom.lookup_fill(vpn, vpn + 100)
+        st = pom.device_state()
+        slot, hit, acc = st.lookup(jnp.arange(32, dtype=jnp.int32))
+        assert bool(hit.all())
+        assert pom.misses == 32 and pom.hits == 0
+        pom.lookup_fill(5, -1)
+        assert pom.hits == 1

@@ -1,0 +1,28 @@
+"""Benchmark-harness smoke: every paper-table module runs and emits rows."""
+import os
+import sys
+
+import pytest
+
+BENCH = os.path.join(os.path.dirname(__file__), "..", "benchmarks")
+sys.path.insert(0, BENCH)
+
+
+@pytest.mark.parametrize("mod_name", [
+    "bench_structure_size", "bench_restrictive_only",
+    "bench_tar_sf_locality", "bench_hash_functions",
+    "bench_roofline_summary",
+])
+def test_bench_module_runs(mod_name):
+    mod = __import__(mod_name)
+    rows = mod.run()
+    assert rows
+    for r in rows:
+        assert set(r) >= {"name", "us", "derived"}
+
+
+def test_structure_size_always_saves_vs_radix():
+    mod = __import__("bench_structure_size")
+    for r in mod.run():
+        if "saving" in r:
+            assert r["saving"] > 0.2, r["derived"]
