@@ -1,0 +1,68 @@
+"""Compatibility shims for older jax releases.
+
+The codebase targets the current jax API surface; some environments pin an
+older jaxlib (e.g. 0.4.x) that predates three spellings we rely on:
+
+* ``jax.sharding.AxisType``        — enum introduced with explicit sharding;
+* ``jax.make_mesh(..., axis_types=...)`` — keyword added alongside it;
+* ``jax.shard_map(..., check_vma=...)``  — top-level export of
+  ``jax.experimental.shard_map.shard_map`` (whose flag is ``check_rep``).
+
+``install()`` patches the missing names in place (no-ops on modern jax) so
+the same source runs under both API generations.  It is invoked from
+``sitecustomize.py`` (``src`` is on ``PYTHONPATH`` for every entry point in
+this repo), and is idempotent.
+
+Importing jax here is safe even for scripts that set ``XLA_FLAGS`` before
+their own ``import jax``: XLA flags are consumed lazily at first backend
+initialization, not at module import (verified against jaxlib 0.4.36).
+"""
+from __future__ import annotations
+
+import enum
+import functools
+import inspect
+
+_installed = False
+
+
+def install() -> None:
+    global _installed
+    if _installed:
+        return
+    import jax
+    import jax.sharding as jsh
+
+    if not hasattr(jsh, "AxisType"):
+        class AxisType(enum.Enum):
+            Auto = "auto"
+            Explicit = "explicit"
+            Manual = "manual"
+
+        jsh.AxisType = AxisType
+
+    if hasattr(jax, "make_mesh") and \
+            "axis_types" not in inspect.signature(jax.make_mesh).parameters:
+        _orig_make_mesh = jax.make_mesh
+
+        @functools.wraps(_orig_make_mesh)
+        def make_mesh(axis_shapes, axis_names, *, devices=None,
+                      axis_types=None):
+            # old jax has no axis-type concept; Auto is the only behavior
+            return _orig_make_mesh(axis_shapes, axis_names, devices=devices)
+
+        jax.make_mesh = make_mesh
+
+    if not hasattr(jax, "shard_map"):
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+                      **kwargs):
+            if check_vma is not None:
+                kwargs.setdefault("check_rep", bool(check_vma))
+            return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                              out_specs=out_specs, **kwargs)
+
+        jax.shard_map = shard_map
+
+    _installed = True

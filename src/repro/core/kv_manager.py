@@ -45,8 +45,10 @@ class BlockInfo:
     seg: int           # REST / FLEX / SWAP
     slot: int          # global pool slot (-1 if swapped)
     refcount: int = 1  # >1 only in FlexSeg (sharing)
-    reuse: int = 0     # RSW/table hits while resident (Fig. 26)
     writable: bool = True
+    # per-vpn RSW-hit reuse counters (Fig. 26) live in
+    # HybridKVManager.reuse_counts, not here: the vectorized stats
+    # feedback writes them array-at-a-time
 
 
 class PoolExhausted(RuntimeError):
@@ -81,6 +83,14 @@ class HybridKVManager:
         self.pending_copies: List[Tuple[int, int]] = []  # (src_slot, dst_slot)
         self.stats = defaultdict(int)
         self.reuse_histogram = defaultdict(int)      # reuse level at eviction
+        # per-vpn RSW-hit counters (vectorized stats feedback writes here;
+        # read at eviction for the Fig. 26 histogram)
+        self.reuse_counts = np.zeros(cfg.vpn_space, np.int32)
+        # dirty-entry tracking for delta device sync: set indices whose
+        # TAR/SF row changed, and flat flex-table indices that changed,
+        # since the last take_dirty() drain
+        self._dirty_sets: set = set()
+        self._dirty_flex: set = set()
 
     # ----------------------------------------------------------- sequences
     def register_sequence(self, seq_id: int) -> int:
@@ -150,6 +160,8 @@ class HybridKVManager:
     def _rest_place(self, vpn: int, st: int, way: int, writable: bool) -> BlockInfo:
         self.tar[st, way] = vpn + 1
         self.sf[st] += 1
+        self._dirty_sets.add(st)
+        self.reuse_counts[vpn] = 0
         self.srrip.on_insert(st, way)
         slot = st * self.cfg.assoc + way
         info = BlockInfo(vpn=vpn, seg=REST, slot=slot, writable=writable)
@@ -167,6 +179,7 @@ class HybridKVManager:
         slot = self.flex_free.pop()
         s, b = divmod(vpn, self.cfg.max_blocks_per_seq)
         self.flex_table[s, b] = slot
+        self._dirty_flex.add(vpn)
         info = BlockInfo(vpn=vpn, seg=FLEX, slot=slot, writable=writable)
         self.blocks[vpn] = info
         self.slot_refcount[slot] = 1
@@ -180,10 +193,11 @@ class HybridKVManager:
         victim_vpn = int(self.tar[st, way]) - 1
         assert victim_vpn >= 0
         info = self.blocks[victim_vpn]
-        self.reuse_histogram[min(info.reuse, 64)] += 1
+        self.reuse_histogram[min(int(self.reuse_counts[victim_vpn]), 64)] += 1
         old_slot = info.slot
         self.tar[st, way] = 0
         self.sf[st] -= 1
+        self._dirty_sets.add(st)
         self.srrip.on_remove(st, way)
         self.slot_owner[old_slot] = -1
         self.stats["rest_evictions"] += 1
@@ -194,7 +208,9 @@ class HybridKVManager:
         new_slot = self.flex_free.pop()
         s, b = divmod(victim_vpn, self.cfg.max_blocks_per_seq)
         self.flex_table[s, b] = new_slot
-        info.seg, info.slot, info.reuse = FLEX, new_slot, 0
+        self._dirty_flex.add(victim_vpn)
+        info.seg, info.slot = FLEX, new_slot
+        self.reuse_counts[victim_vpn] = 0
         self.slot_refcount[new_slot] = 1
         self.slot_owner[new_slot] = victim_vpn
         self.pending_copies.append((old_slot, new_slot))
@@ -205,6 +221,7 @@ class HybridKVManager:
         if info.seg == FLEX:
             s, b = divmod(vpn, self.cfg.max_blocks_per_seq)
             self.flex_table[s, b] = -1
+            self._dirty_flex.add(vpn)
             self.slot_refcount[info.slot] -= 1
             if self.slot_refcount[info.slot] > 0:
                 # another sequence still references the shared slot
@@ -219,6 +236,7 @@ class HybridKVManager:
             way = info.slot - st * self.cfg.assoc
             self.tar[st, way] = 0
             self.sf[st] -= 1
+            self._dirty_sets.add(st)
             self.srrip.on_remove(st, way)
             self.slot_owner[info.slot] = -1
         del self.blocks[vpn]
@@ -226,18 +244,25 @@ class HybridKVManager:
     # ----------------------------------------------------------- promotion
     def record_device_stats(self, vpns: np.ndarray, in_rest: np.ndarray,
                             accesses: np.ndarray) -> None:
-        """Feed back per-step device translation stats (paper: PTE counters)."""
-        vpns = np.asarray(vpns).ravel()
-        in_rest = np.asarray(in_rest).ravel()
+        """Feed back per-step device translation stats (paper: PTE counters).
+
+        Fully vectorized: the RSW-hit way recovery is a batched TAR tag
+        match (tar[h(vpn)] == vpn+1 iff the vpn is REST-resident), SRRIP
+        promotion and reuse counting are one fancy-indexed write each —
+        no per-vpn Python loop on the per-step path.
+        """
+        vpns = np.asarray(vpns).ravel().astype(np.int64)
+        in_rest = np.asarray(in_rest).ravel().astype(bool)
         accesses = np.asarray(accesses).ravel()
         hits = vpns[in_rest]
-        for vpn in hits:
-            info = self.blocks.get(int(vpn))
-            if info is not None and info.seg == REST:
-                info.reuse += 1
-                st = self.hash(int(vpn), self.cfg.num_sets)
-                way = info.slot - st * self.cfg.assoc
-                self.srrip.on_hit(st, way)
+        if hits.size:
+            sts = np.asarray(self.hash(hits.astype(np.int32),
+                                       self.cfg.num_sets))
+            eq = self.tar[sts] == (hits[:, None] + 1)
+            ok = eq.any(axis=1)                  # still REST-resident
+            ways = eq.argmax(axis=1)
+            self.srrip.on_hit_batch(sts[ok], ways[ok])
+            np.add.at(self.reuse_counts, hits[ok], 1)
         self.stats["rsw_hits"] += int(in_rest.sum())
         miss = ~in_rest
         self.stats["flex_walks"] += int(miss.sum())
@@ -262,6 +287,7 @@ class HybridKVManager:
             # _try_rest_alloc re-registered vpn; fix bookkeeping of old slot
             s, b = divmod(int(vpn), self.cfg.max_blocks_per_seq)
             self.flex_table[s, b] = -1
+            self._dirty_flex.add(int(vpn))
             self.flex_free.append(old_slot)
             if self.slot_owner[old_slot] == vpn:
                 self.slot_owner[old_slot] = -1
@@ -294,6 +320,7 @@ class HybridKVManager:
             self.slot_refcount[info.slot] += 1
             rc = self.slot_refcount[info.slot]
             self.flex_table[ds, b] = info.slot
+            self._dirty_flex.add(dst_vpn)
             self.blocks[dst_vpn] = BlockInfo(
                 vpn=dst_vpn, seg=FLEX, slot=info.slot,
                 refcount=rc, writable=False)
@@ -312,11 +339,13 @@ class HybridKVManager:
         old_slot = info.slot
         self.tar[st, way] = 0
         self.sf[st] -= 1
+        self._dirty_sets.add(st)
         self.srrip.on_remove(st, way)
         self.slot_owner[old_slot] = -1
         new_slot = self.flex_free.pop()
         s, b = divmod(vpn, self.cfg.max_blocks_per_seq)
         self.flex_table[s, b] = new_slot
+        self._dirty_flex.add(vpn)
         info.seg, info.slot = FLEX, new_slot
         self.slot_refcount[new_slot] = 1
         self.slot_owner[new_slot] = vpn
@@ -350,6 +379,18 @@ class HybridKVManager:
         out, self.pending_copies = self.pending_copies, []
         self.stats["copies_issued"] += len(out)
         return out
+
+    def take_dirty(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Drain the dirty-entry sets accumulated since the last call.
+
+        Returns (set_indices, flat_flex_indices): the TAR/SF rows and the
+        flat flex-table entries a delta device sync must re-upload.
+        """
+        sets = np.array(sorted(self._dirty_sets), np.int64)
+        flex = np.array(sorted(self._dirty_flex), np.int64)
+        self._dirty_sets.clear()
+        self._dirty_flex.clear()
+        return sets, flex
 
     # --------------------------------------------------------- device view
     def device_state(self):

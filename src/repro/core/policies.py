@@ -33,6 +33,10 @@ class SRRIP:
     def on_hit(self, s: int, w: int) -> None:
         self.rrpv[s, w] = 0
 
+    def on_hit_batch(self, s: np.ndarray, w: np.ndarray) -> None:
+        """Vectorized hit promotion (one fancy-indexed write per step)."""
+        self.rrpv[s, w] = 0
+
     def on_remove(self, s: int, w: int) -> None:
         self.rrpv[s, w] = self.max_rrpv
 

@@ -71,8 +71,13 @@ def translate(state: TranslationState, vpn: jnp.ndarray,
 
 def translate_radix(rest: Optional[RestSegState], radix: RadixTable,
                     vpn: jnp.ndarray, hash_name: str = "modulo",
-                    entry_bytes: int = 8) -> TranslateResult:
-    """Hybrid (or pure when rest=None) translation over the radix baseline."""
+                    entry_bytes: int = 8,
+                    rest_base: int = 0) -> TranslateResult:
+    """Hybrid (or pure when rest=None) translation over the radix baseline.
+
+    ``rest_base`` is the RestSeg's slot offset in the global pool, exactly
+    as in ``translate()`` — RSW hits resolve to ``rest_base + r.slot``.
+    """
     flex_slot, flex_ok, walk_acc = radix.walk(vpn)
     if rest is None:
         return TranslateResult(slot=flex_slot, mapped=flex_ok,
@@ -80,7 +85,7 @@ def translate_radix(rest: Optional[RestSegState], radix: RadixTable,
                                accesses=walk_acc,
                                bytes_touched=walk_acc * entry_bytes)
     r = rsw(rest, vpn, hash_name)
-    slot = jnp.where(r.hit, r.slot, flex_slot)
+    slot = jnp.where(r.hit, rest_base + r.slot, flex_slot)
     mapped = r.hit | flex_ok
     accesses = 1 + jnp.where(r.sf_skipped, 0, 1) + jnp.where(r.hit, 0, walk_acc)
     byt = 1 + r.tar_touched * 6 + jnp.where(r.hit, 0, walk_acc * entry_bytes)

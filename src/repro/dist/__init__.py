@@ -1,0 +1,19 @@
+"""Distribution layer: sharding rules, pipeline/tensor parallelism,
+gradient compression.
+
+* ``sharding``    — logical parameter/activation sharding rules (GSPMD),
+* ``pipeline``    — GPipe schedule (reference + SPMD over a stage axis),
+* ``megatron``    — hand-scheduled tensor-parallel forward (explicit
+                    collectives; the GSPMD forward is the oracle),
+* ``compression`` — int8 + error-feedback gradient compression for the
+                    cross-pod data-parallel hop.
+"""
+from . import compression
+from .sharding import (ShardingRules, make_pins, param_shardings, batch_spec)
+from .pipeline import gpipe_reference, gpipe_spmd, bubble_fraction
+
+__all__ = [
+    "compression",
+    "ShardingRules", "make_pins", "param_shardings", "batch_spec",
+    "gpipe_reference", "gpipe_spmd", "bubble_fraction",
+]

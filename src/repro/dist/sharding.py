@@ -1,0 +1,176 @@
+"""Logical sharding rules for parameters and activations (GSPMD).
+
+Two contracts live here:
+
+* ``param_shardings`` — walks the parameter pytree and assigns each leaf a
+  ``NamedSharding`` from its *logical* spec (``_logical_param_spec``): the
+  model axis carries tensor parallelism (column/row-parallel linears,
+  vocab-sharded embeddings, expert-sharded MoE weights) and, when
+  ``zero_params`` is set, the data axes additionally shard the non-model
+  dimension (ZeRO-3/FSDP).  Per-layer stacks (``lax.scan`` leading dims)
+  are never sharded — logical specs are written against the unstacked leaf
+  and left-padded with ``None``.
+
+* ``make_pins`` — activation sharding constraints by *name* (the stable
+  contract points threaded through models/ as ``pins(name, x)``).  Pins
+  only steer layout, never numerics, so every spec passes ``_guard``:
+  axes that do not divide the dimension are dropped rather than erroring.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Mesh-logical axis assignment.
+
+    ``data_axes``: mesh axes carrying data parallelism (("data",) on one
+    pod, ("pod", "data") on a multipod mesh).  ``zero_params``: shard the
+    non-model parameter dim over the data axes (ZeRO-3); off = pure
+    replication outside the model axis (faster for small models).
+    """
+
+    data_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    zero_params: bool = True
+
+
+def _axes_size(axes, mesh: Mesh) -> int:
+    ax = (axes,) if isinstance(axes, str) else tuple(axes)
+    return int(np.prod([mesh.shape[a] for a in ax]))
+
+
+def _guard(spec, shape, mesh: Mesh) -> P:
+    """Drop spec entries whose mesh-axis product does not divide the dim."""
+    spec = tuple(spec)[:len(shape)]
+    spec = spec + (None,) * (len(shape) - len(spec))
+    out = []
+    for dim, axes in zip(shape, spec):
+        if axes is None:
+            out.append(None)
+        else:
+            out.append(axes if dim % _axes_size(axes, mesh) == 0 else None)
+    return P(*out)
+
+
+def _logical_param_spec(path: Tuple[str, ...],
+                        rules: ShardingRules) -> Optional[tuple]:
+    """Logical spec of one (unstacked) parameter leaf; None = replicated.
+
+    ``path`` is the tuple of dict keys down to the leaf, e.g.
+    ``("layers", "attn", "q", "w")``.
+    """
+    D = tuple(rules.data_axes) if rules.zero_params else None
+    M = rules.model_axis
+    name = path[-1]
+
+    # small / replicated leaves: norms, biases, mamba scalars
+    if "norm" in name or name in ("b", "conv_b", "A_log", "D", "dt_bias"):
+        return None
+    if name == "table":                 # embed / lm_head: vocab over model
+        return (M, D)
+    if name == "w":
+        parent = path[-2] if len(path) > 1 else ""
+        if parent in ("q", "k", "v", "gate", "up"):   # column-parallel
+            return (D, M)
+        if parent in ("o", "down"):                   # row-parallel
+            return (M, D)
+        if parent == "cross":
+            return (D, M)
+        return (D, None)                # router / frontend_proj / misc
+    # MoE expert stacks are raw 3D arrays (E, d_in, d_out): experts over
+    # the model axis (expert parallelism), ZeRO over d_model
+    if name in ("gate", "up"):
+        return (M, D, None)
+    if name == "down":
+        return (M, None, D)
+    # mamba projections
+    if name in ("in_z", "in_x", "in_dt"):
+        return (D, M)
+    if name in ("in_B", "in_C"):
+        return (D, None)
+    if name == "conv_w":
+        return (None, M)
+    if name == "out_proj":
+        return (M, D)
+    return None
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+        else:
+            names.append(str(k))
+    return tuple(names)
+
+
+def param_shardings(params, rules: ShardingRules, mesh: Mesh):
+    """NamedSharding pytree for a parameter pytree (arrays or ShapeDtype)."""
+
+    def leaf_sharding(path, leaf):
+        spec = _logical_param_spec(_path_names(path), rules)
+        if spec is None:
+            return NamedSharding(mesh, P())
+        # left-pad for scan-stack dims (layers / hybrid sub-stacks)
+        pad = (None,) * max(0, len(leaf.shape) - len(spec))
+        return NamedSharding(mesh, _guard(pad + tuple(spec), leaf.shape,
+                                          mesh))
+
+    return jax.tree_util.tree_map_with_path(leaf_sharding, params)
+
+
+def batch_spec(batch, rules: ShardingRules, mesh: Mesh):
+    """Batch shardings: leading dim over the data axes, rest replicated."""
+    D = tuple(rules.data_axes)
+
+    def leaf(x):
+        return NamedSharding(mesh, _guard((D,), x.shape, mesh))
+
+    return jax.tree.map(leaf, batch)
+
+
+# ------------------------------------------------------- activation pins
+
+def _pin_table(rules: ShardingRules):
+    D, M = tuple(rules.data_axes), rules.model_axis
+    return {
+        # training activations
+        "act_btd": (D, None, M),      # residual stream: d sharded between
+        "act_full": (D, None, None),  # gathered ONCE for q/k/v + mlp input
+        "act_q": (D, None, M, None),
+        "act_kv": (D, None, M, None),
+        "act_ff": (D, None, M),
+        "logits": (D, None, M),
+        # MoE dispatch: groups over data, experts over model
+        "moe_gtd": (D, None, None),
+        "moe_gecd": (D, M, None, None),
+        "moe_gecf": (D, M, None, None),
+        "ssm_inner": (D, None, M),
+        # decode step
+        "dec_bd": (D, None),
+        "dec_logits": (D, M),
+    }
+
+
+def make_pins(mesh: Mesh, rules: ShardingRules):
+    """pins(name, x): with_sharding_constraint by contract-point name."""
+    table = _pin_table(rules)
+
+    def pins(name: str, x):
+        spec = table.get(name)
+        if spec is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh, _guard(spec, x.shape, mesh)))
+
+    return pins

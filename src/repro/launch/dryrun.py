@@ -210,7 +210,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = hlo_analysis.normalize_cost_analysis(compiled.cost_analysis())
     hlo = compiled.as_text()
     coll = hlo_analysis.analyze_collectives(hlo)
     costs = hlo_analysis.loop_corrected_costs(compiled, hlo)

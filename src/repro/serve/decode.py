@@ -13,10 +13,16 @@ Layout (design §5): the KV pool is sharded
   (flash-decoding).  This sidesteps GQA-head divisibility entirely
   (kv_heads never needs to divide the model axis).
 
-Translation (the paper's technique) runs **inside** the shard_map region:
-each data group carries its own TAR/SF/flex-table and resolves its vpns
-with the hybrid RSW before touching pool data — the flexible table is the
-baseline that streams per step; TAR/SF are the compact structures.
+Translation (the paper's technique) runs **exactly once per step**
+(DESIGN.md §translate-once): ``translate_step`` resolves every block vpn
+of every group — plus the current block being written — in one hybrid
+RSW/flex lookup *before* the layer scan, and the resolved slot table is
+what flows into every attention layer.  The per-layer work is pure
+gather/scatter over pre-resolved slots; no translation structure is
+touched inside the scan body (O(B·nblk) translation per step instead of
+O(L·B·nblk)).  The same pass emits the per-vpn telemetry (in_rest /
+accesses / mapped) the engine feeds back to the promotion policy, so the
+host never re-translates.
 
 Everything outside paged attention (projections, MoE, mamba recurrence,
 lm head) stays in pjit/GSPMD land with sharding constraints.
@@ -26,7 +32,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -38,9 +44,8 @@ from repro.models import layers as Lmod
 from repro.models.transformer import ModelDims
 from repro.models.ssm import MambaCache, mamba_decode_step
 from repro.models.moe import moe_decode
-from repro.core.hashes import get_hash
+from repro.core.tar_sf import RestSegState, rsw
 from repro.kernels.paged_attention.ref import paged_attention_ref
-from repro.kernels.utopia_rsw.ref import rsw_ref
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,61 +166,147 @@ def decode_state_shardings(state_shape, mesh: Mesh, spec: DecodeSpec):
     return {k: guard(k, v) for k, v in state_shape.items()}
 
 
+# --------------------------------------------- once-per-step translation
+
+class StepTranslation(NamedTuple):
+    """Result of the single hybrid translation performed per decode step.
+
+    Group-major: ``G`` leads every device array so the same structure
+    serves the mesh path (``P(da, ...)`` — each data group reads row ``g``)
+    and the single-device engine (``G == 1``).
+    """
+
+    slots: jnp.ndarray      # (G, B_loc, nblk) int32 resolved pool slot, -1
+    w_slot: jnp.ndarray     # (G, B_loc) int32 slot of the block being written
+    w_valid: jnp.ndarray    # (G, B_loc) bool: mapped & owned by the group
+    in_rest: jnp.ndarray    # (G, B_loc, nblk) bool — resolved by the RSW
+    mapped: jnp.ndarray     # (G, B_loc, nblk) bool
+    accesses: jnp.ndarray   # (G, B_loc, nblk) int32 structure accesses
+    vpns: jnp.ndarray       # (B_loc, nblk) int32 local vpn grid
+
+
+def _hybrid_lookup(vpns: jax.Array, tar: jax.Array, sf: jax.Array,
+                   flex_flat: jax.Array, hash_name: str):
+    """Hybrid RSW ∥ flex lookup with ``translate()``-compatible accounting.
+
+    This is the ONLY translation primitive the decode step may touch, and
+    it must be called exactly once per step (guarded by
+    tests/test_engine_hotpath.py::test_translation_runs_once_per_step).
+    The RestSeg walk itself is the canonical ``core.tar_sf.rsw`` — one
+    source of truth for the paper's RSW semantics; only the flat flex
+    gather and the access accounting live here.
+    Returns (slot, in_rest, mapped, accesses), each shaped like ``vpns``.
+    """
+    rest = RestSegState(tar=tar, sf=sf, meta=jnp.zeros_like(tar))
+    r = rsw(rest, vpns.astype(jnp.int32), hash_name)
+    flex_slot = flex_flat[vpns]
+    slot = jnp.where(r.hit, r.slot,
+                     jnp.where(flex_slot >= 0, flex_slot, -1))
+    mapped = r.hit | (flex_slot >= 0)
+    # SF probe (1) + TAR set read unless SF filtered (1) + flex walk on miss
+    accesses = (1 + jnp.where(r.sf_skipped, 0, 1)
+                + jnp.where(r.hit, 0, 1))
+    return (slot.astype(jnp.int32), r.hit, mapped,
+            accesses.astype(jnp.int32))
+
+
+def translate_step(tar: jax.Array, sf: jax.Array, flex: jax.Array,
+                   positions: jax.Array, spec: DecodeSpec
+                   ) -> StepTranslation:
+    """Translate ALL block vpns of ALL groups once — the step's only
+    translation dispatch.
+
+    tar (G, n_sets, assoc), sf (G, n_sets), flex (G, seqs*nblk) are the
+    per-group translation structures; ``positions`` (B,) the pre-step
+    context lengths.  The current block's write-slot lookup is batched
+    into the same dispatch (it is just ``B_loc`` extra vpns).
+    """
+    G = tar.shape[0]
+    nblk = spec.max_blocks_per_seq
+    bs = spec.block_size
+    B = positions.shape[0]
+    if spec.mode == "batch":
+        B_loc = B // G
+        pos_g = positions.reshape(G, B_loc)
+    else:
+        B_loc = B
+        pos_g = jnp.broadcast_to(positions[None, :], (G, B))
+    seq = jnp.arange(B_loc, dtype=jnp.int32)
+    grid = (seq[:, None] * nblk
+            + jnp.arange(nblk, dtype=jnp.int32)[None, :])   # (B_loc, nblk)
+
+    if spec.mode == "batch":
+        cur_block = pos_g // bs
+        owner = jnp.ones((G, B_loc), bool)
+    else:  # striped: block b lives on group b % G, locally at b // G
+        cur_block_global = pos_g // bs
+        owner = (cur_block_global % G) == jnp.arange(
+            G, dtype=jnp.int32)[:, None]
+        cur_block = cur_block_global // G
+    # an idle/released slot's ctx_len keeps advancing with the batch, so
+    # its current block can run past the sequence's vpn range — without
+    # this bound its cur_vpn would alias ANOTHER sequence's vpns and the
+    # write below would scatter garbage into a live block
+    in_range = cur_block < nblk
+    cur_block = jnp.minimum(cur_block, nblk - 1)
+    cur_vpn = seq[None, :] * nblk + cur_block               # (G, B_loc)
+
+    n_read = B_loc * nblk
+    queries = jnp.concatenate(
+        [jnp.broadcast_to(grid.reshape(-1)[None, :], (G, n_read)), cur_vpn],
+        axis=1)                                             # (G, n_read+B_loc)
+    slot, hit, mapped, acc = jax.vmap(
+        lambda t, s, f, v: _hybrid_lookup(v, t, s, f, spec.hash_name)
+    )(tar, sf, flex, queries)
+
+    shape3 = (G, B_loc, nblk)
+    return StepTranslation(
+        slots=slot[:, :n_read].reshape(shape3),
+        w_slot=slot[:, n_read:],
+        w_valid=mapped[:, n_read:] & owner & in_range,
+        in_rest=hit[:, :n_read].reshape(shape3),
+        mapped=mapped[:, :n_read].reshape(shape3),
+        accesses=acc[:, :n_read].reshape(shape3),
+        vpns=grid,
+    )
+
+
 # ------------------------------------------------- paged attention (SPMD)
 
-def _paged_attn_shardmap(q, k_new, v_new, k_pool_l, v_pool_l, tar, sf, flex,
-                         ctx_len, pos, *, spec: DecodeSpec, mesh: Mesh,
-                         n_kv: int, head_dim: int):
-    """Run translation + write + attention inside shard_map.
+def _paged_attn_shardmap(q, k_new, v_new, k_pool_l, v_pool_l, slots, w_slot,
+                         w_valid, pos, *, spec: DecodeSpec,
+                         mesh: Mesh, n_kv: int, head_dim: int):
+    """Write + attention over PRE-RESOLVED slots inside shard_map.
 
     q: (B, H, hd); k_new/v_new: (B, KV, hd); k/v_pool_l: one layer's pool
-    (G*slots, bs, KV, hd); ctx_len/pos: (B,).
+    (G*slots, bs, KV, hd); slots (G, B_loc, nblk); w_slot/w_valid
+    (G, B_loc); pos: (B,) pre-step context lengths (write position AND
+    attention extent).  No translation structure is consumed here —
+    translation happened once in ``translate_step``.
     Returns (attn_out (B, H, hd) fp32, k_pool_l', v_pool_l').
     """
     da, ma = spec.data_axes, spec.model_axis
     TP = int(np.prod([mesh.shape[a] for a in (ma,)]))
-    G = int(np.prod([mesh.shape[a] for a in da]))
     bs = spec.block_size
     bs_loc = bs // TP
     batch_mode = spec.mode == "batch"
 
-    def local(q, k_new, v_new, kp, vp, tar, sf, flex, ctx, pos):
+    def local(q, k_new, v_new, kp, vp, slots, w_slot, w_valid, pos):
         # shapes: q (B_loc, H, hd); kp (slots, bs_loc, KV, hd);
-        # tar (1, n_sets, assoc) -> squeeze group dim
-        tar, sf, flex = tar[0], sf[0], flex[0]
+        # slots (1, B_loc, nblk) -> squeeze group dim
+        slots, w_slot, w_valid = slots[0], w_slot[0], w_valid[0]
         m_idx = jax.lax.axis_index(ma)
         if len(da) == 1:
             g_idx = jax.lax.axis_index(da[0])
         else:
             g_idx = (jax.lax.axis_index(da[0]) * mesh.shape[da[1]]
                      + jax.lax.axis_index(da[1]))
-        B_loc = q.shape[0]
-        nblk = spec.max_blocks_per_seq
 
-        # ---- translate all blocks of the local sequences (hybrid RSW) ----
-        seq_ids = jnp.arange(B_loc, dtype=jnp.int32)
-        vpns = (seq_ids[:, None] * nblk
-                + jnp.arange(nblk, dtype=jnp.int32)[None, :])   # (B_loc,nblk)
-        slot, in_rest, mapped = rsw_ref(
-            vpns.reshape(-1), tar, sf, flex, hash_name=spec.hash_name)
-        slots = jnp.where(mapped.reshape(B_loc, nblk) > 0,
-                          slot.reshape(B_loc, nblk), -1)
-
-        # ---- write current token's K/V into its block slot --------------
-        if batch_mode:
-            cur_block = pos // bs                                # (B_loc,)
-            blk_owner = jnp.ones_like(pos, dtype=bool)
-        else:
-            cur_block_global = pos // bs
-            blk_owner = (cur_block_global % G) == g_idx
-            cur_block = cur_block_global // G
-        cur_vpn = seq_ids * nblk + cur_block
-        w_slot, w_rest, w_mapped = rsw_ref(cur_vpn, tar, sf, flex,
-                                           hash_name=spec.hash_name)
+        # ---- write current token's K/V into its pre-resolved slot -------
         tok = pos % bs
         own_tok = (tok // bs_loc) == m_idx
         t_loc = tok % bs_loc
-        own = (w_mapped > 0) & own_tok & blk_owner
+        own = w_valid & own_tok
         # unowned rows scatter to an out-of-bounds slot and are DROPPED —
         # clamping them to slot 0 would collide with a real sequence's
         # block and clobber its fresh write (duplicate-index scatter)
@@ -230,10 +321,10 @@ def _paged_attn_shardmap(q, k_new, v_new, k_pool_l, v_pool_l, tar, sf, flex,
             block_tokens = bs
             tok_offset = m_idx * bs_loc
         else:
-            block_tokens = G * bs
+            block_tokens = mesh_G * bs
             tok_offset = g_idx * bs + m_idx * bs_loc
         o, m, l = paged_attention_ref(
-            q, kp, vp, slots, ctx + 1, tok_offset=tok_offset, tok_stride=1,
+            q, kp, vp, slots, pos + 1, tok_offset=tok_offset, tok_stride=1,
             block_tokens=block_tokens)
         combine = (ma,) if batch_mode else tuple(da) + (ma,)
         m_glob = jax.lax.pmax(m, combine)
@@ -243,6 +334,7 @@ def _paged_attn_shardmap(q, k_new, v_new, k_pool_l, v_pool_l, tar, sf, flex,
         out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
         return out, kp, vp
 
+    mesh_G = int(np.prod([mesh.shape[a] for a in da]))
     dspec = P(da) if batch_mode else P()
     in_specs = (
         P(da, None, None) if batch_mode else P(None, None, None),  # q
@@ -250,10 +342,10 @@ def _paged_attn_shardmap(q, k_new, v_new, k_pool_l, v_pool_l, tar, sf, flex,
         P(da, None, None) if batch_mode else P(None, None, None),  # v_new
         P(da, ma, None, None),                                     # k_pool
         P(da, ma, None, None),                                     # v_pool
-        P(da, None, None),                                         # tar
-        P(da, None),                                               # sf
-        P(da, None),                                               # flex
-        dspec, dspec,                                              # ctx, pos
+        P(da, None, None),                                         # slots
+        P(da, None),                                               # w_slot
+        P(da, None),                                               # w_valid
+        dspec,                                                     # pos
     )
     out_specs = (
         P(da, None, None) if batch_mode else P(None, None, None),
@@ -262,8 +354,8 @@ def _paged_attn_shardmap(q, k_new, v_new, k_pool_l, v_pool_l, tar, sf, flex,
     )
     fn = jax.shard_map(local, mesh=mesh, in_specs=in_specs,
                        out_specs=out_specs, check_vma=False)
-    return fn(q, k_new, v_new, k_pool_l, v_pool_l, tar, sf, flex,
-              ctx_len, pos)
+    return fn(q, k_new, v_new, k_pool_l, v_pool_l, slots, w_slot, w_valid,
+              pos)
 
 
 # --------------------------------------------------------- full serve step
@@ -271,8 +363,15 @@ def _paged_attn_shardmap(q, k_new, v_new, k_pool_l, v_pool_l, tar, sf, flex,
 def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                     mesh: Optional[Mesh] = None, pins=Lmod.no_pins,
                     dtype=jnp.bfloat16):
-    """Returns serve_step(params, dstate, tokens (B,), ) ->
-    (logits (B, V), new dstate).  One new token per live sequence."""
+    """Returns serve_step(params, dstate, tokens (B,)) ->
+    (logits (B, V), new dstate, stats).  One new token per live sequence.
+
+    ``stats`` carries the step's translation telemetry (``in_rest`` /
+    ``accesses`` / ``mapped`` / ``slots``, all group-major) plus the
+    greedy ``next_token`` (B,) — everything the engine needs from the
+    device in ONE fetch.  Translation runs exactly once, before the layer
+    scan (see ``translate_step``).
+    """
 
     def qkv_decode(blk, x, positions):
         B = x.shape[0]
@@ -290,17 +389,17 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                                 cfg.rope_theta)[:, 0]
         return q, k, v
 
-    def attn_sublayer(blk, x, kp_l, vp_l, dstate, positions):
+    def attn_sublayer(blk, x, kp_l, vp_l, trans, positions):
         B = x.shape[0]
         q, k, v = qkv_decode(blk, x, positions)
         if mesh is not None:
             out, kp_l, vp_l = _paged_attn_shardmap(
-                q, k, v, kp_l, vp_l, dstate["tar"], dstate["sf"],
-                dstate["flex"], dstate["ctx_len"], positions,
+                q, k, v, kp_l, vp_l, trans.slots, trans.w_slot,
+                trans.w_valid, positions,
                 spec=spec, mesh=mesh, n_kv=dims.n_kv, head_dim=dims.head_dim)
         else:
             out, kp_l, vp_l = _paged_attn_local_ref(
-                q, k, v, kp_l, vp_l, dstate, positions, spec)
+                q, k, v, kp_l, vp_l, trans, positions, spec)
         o = Lmod.linear(blk["attn"]["o"], out.reshape(B, -1).astype(x.dtype))
         return x + pins("dec_bd", o), kp_l, vp_l
 
@@ -332,12 +431,23 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
         o = o.reshape(B, -1).astype(x.dtype)
         return x + pins("dec_bd", Lmod.linear(blk["cross"]["o"], o))
 
+    n_attn = sum(cfg.attn_on_layer(l) for l in range(cfg.num_layers))
+
     def serve_step(params, dstate, tokens):
         positions = dstate["ctx_len"]
         x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
         x = pins("dec_bd", x)
         fam = cfg.family
         new_state = dict(dstate)
+        stats: Dict[str, jax.Array] = {}
+
+        # ---- the step's single translation dispatch ----------------------
+        trans = None
+        if n_attn:
+            trans = translate_step(dstate["tar"], dstate["sf"],
+                                   dstate["flex"], positions, spec)
+            stats.update(slots=trans.slots, in_rest=trans.in_rest,
+                         mapped=trans.mapped, accesses=trans.accesses)
 
         n_layers = cfg.num_layers
         if fam in ("dense", "moe", "vlm", "audio"):
@@ -356,8 +466,8 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                 i = xl["idx"]
                 kp_l = jax.lax.dynamic_index_in_dim(kp, i, 0, keepdims=False)
                 vp_l = jax.lax.dynamic_index_in_dim(vp, i, 0, keepdims=False)
-                x, kp_l, vp_l = attn_sublayer(blk, x, kp_l, vp_l,
-                                              dstate, positions)
+                x, kp_l, vp_l = attn_sublayer(blk, x, kp_l, vp_l, trans,
+                                              positions)
                 kp = jax.lax.dynamic_update_index_in_dim(kp, kp_l, i, 0)
                 vp = jax.lax.dynamic_update_index_in_dim(vp, vp_l, i, 0)
                 if fam == "audio":
@@ -407,7 +517,7 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                         vp_l = jax.lax.dynamic_index_in_dim(
                             vp, gi, 0, keepdims=False)
                         x, kp_l, vp_l = attn_sublayer(
-                            blk["attn"], x, kp_l, vp_l, dstate, positions)
+                            blk["attn"], x, kp_l, vp_l, trans, positions)
                         kp = jax.lax.dynamic_update_index_in_dim(
                             kp, kp_l, gi, 0)
                         vp = jax.lax.dynamic_update_index_in_dim(
@@ -440,37 +550,30 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
             mask = jnp.arange(vpad) < dims.logical_vocab
             logits = jnp.where(mask, logits, jnp.asarray(-1e9, logits.dtype))
         logits = pins("dec_logits", logits)
+        # greedy sampling in-graph: the engine reads the token ids, not the
+        # (B, V) logits, so the per-step fetch stays O(B)
+        stats["next_token"] = jnp.argmax(logits, axis=-1).astype(jnp.int32)
         new_state["ctx_len"] = dstate["ctx_len"] + 1
-        return logits, new_state
+        return logits, new_state, stats
 
     return serve_step
 
 
 # ------------------------------------------------ single-device reference
 
-def _paged_attn_local_ref(q, k_new, v_new, kp_l, vp_l, dstate, pos,
+def _paged_attn_local_ref(q, k_new, v_new, kp_l, vp_l,
+                          trans: StepTranslation, pos,
                           spec: DecodeSpec):
-    """Mesh-free reference used by the engine on one device (G=1, TP=1)."""
-    tar, sf, flex = dstate["tar"][0], dstate["sf"][0], dstate["flex"][0]
-    B = q.shape[0]
-    nblk = spec.max_blocks_per_seq
-    bs = spec.block_size
-    seq_ids = jnp.arange(B, dtype=jnp.int32)
-    vpns = (seq_ids[:, None] * nblk
-            + jnp.arange(nblk, dtype=jnp.int32)[None, :])
-    slot, in_rest, mapped = rsw_ref(vpns.reshape(-1), tar, sf, flex,
-                                    hash_name=spec.hash_name)
-    slots = jnp.where(mapped.reshape(B, nblk) > 0,
-                      slot.reshape(B, nblk), -1)
-    cur_vpn = seq_ids * nblk + pos // bs
-    w_slot, _, w_mapped = rsw_ref(cur_vpn, tar, sf, flex,
-                                  hash_name=spec.hash_name)
-    t = pos % bs
-    own = w_mapped > 0
-    ws = jnp.where(own, w_slot, kp_l.shape[0])   # unowned -> dropped
+    """Mesh-free reference used by the engine on one device (G=1, TP=1).
+
+    Consumes the pre-resolved ``StepTranslation`` — no translation here.
+    """
+    slots = trans.slots[0]                          # (B, nblk)
+    w_slot, w_valid = trans.w_slot[0], trans.w_valid[0]
+    t = pos % spec.block_size
+    ws = jnp.where(w_valid, w_slot, kp_l.shape[0])  # unowned -> dropped
     kp_l = kp_l.at[ws, t].set(k_new.astype(kp_l.dtype), mode="drop")
     vp_l = vp_l.at[ws, t].set(v_new.astype(vp_l.dtype), mode="drop")
-    o, m, l = paged_attention_ref(q, kp_l, vp_l, slots,
-                                  dstate["ctx_len"] + 1)
+    o, m, l = paged_attention_ref(q, kp_l, vp_l, slots, pos + 1)
     out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
     return out, kp_l, vp_l

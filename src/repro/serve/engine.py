@@ -5,14 +5,23 @@ The engine is the "operating system" of the serving stack (paper §5.6):
 * admission: prefill a prompt, allocate its KV blocks fault-based (straight
   into the RestSeg), install K/V into the pool slots the manager assigned;
 * steady state: every decode step (i) allocates the current block when a
-  sequence crosses a block boundary, (ii) uploads the (tiny) TAR/SF deltas
-  + flex table, (iii) runs the jitted serve_step, (iv) feeds translation
-  stats back to the manager (PTW-cost tracking), (v) applies any pending
-  slot-to-slot migrations (the DMA page copies of Fig. 16);
+  sequence crosses a block boundary, (ii) scatters the *dirty deltas* of
+  TAR/SF/flex to the device (only entries that changed since the last
+  step), (iii) runs the jitted serve_step — which translates once and
+  returns the translation telemetry as an auxiliary output, (iv) feeds
+  that telemetry back to the manager (PTW-cost tracking) with no extra
+  translation, (v) applies any pending slot-to-slot migrations as ONE
+  batched gather/scatter (the DMA page copies of Fig. 16);
 * prefix sharing between requests with a common prompt prefix (FlexSeg
   refcounts — the paper's inter-process page sharing);
 * eviction/swap: pool exhaustion surfaces as swap events exactly as in the
   restrictive-only experiment (Fig. 9).
+
+Hot-path contract (DESIGN.md §translate-once): the steady-state ``step()``
+performs a BOUNDED number of host<->device transfers — at most three
+dirty-delta scatters, two pool copy dispatches, the step dispatch itself,
+and ONE device_get of {next tokens, ctx lengths, telemetry} — independent
+of batch size, sequence count, or pending-copy count.
 
 Single-host configuration (G = 1 data group); the SPMD decode step in
 serve/decode.py is the same code the launcher shards across a pod.
@@ -32,6 +41,16 @@ from repro.models import FwdOptions, forward, model_dims
 from repro.models.transformer import ModelDims
 from .decode import (DecodeSpec, make_serve_step, init_decode_state,
                      make_decode_spec)
+
+
+def _pad_pow2(idx: np.ndarray, fill) -> np.ndarray:
+    """Pad an index vector to the next power of two (bounded set of XLA
+    scatter shapes: without this every distinct dirty/copy count compiles
+    a fresh executable, which dwarfs the dispatch it feeds)."""
+    n = 1 << max(0, int(idx.size - 1).bit_length())
+    if n == idx.size:
+        return idx
+    return np.concatenate([idx, np.full(n - idx.size, fill, idx.dtype)])
 
 
 @dataclasses.dataclass
@@ -79,6 +98,10 @@ class Engine:
         self._slot_of: Dict[int, int] = {}
         self._n_attn_layers = sum(cfg.attn_on_layer(l)
                                   for l in range(cfg.num_layers))
+        # host mirror of ctx_len: block-boundary checks must not read the
+        # device array per request (that is one D2H sync per sequence)
+        self._ctx_host = np.zeros(max_batch, np.int64)
+        self._synced_full = False
 
     # ------------------------------------------------------------ admission
     def add_request(self, req: Request,
@@ -150,6 +173,7 @@ class Engine:
         ctx0 = S + (self.cfg.frontend_tokens if self.cfg.family == "vlm"
                     else 0)
         self.dstate["ctx_len"] = self.dstate["ctx_len"].at[slot].set(ctx0)
+        self._ctx_host[slot] = ctx0
         # first generated token from prefill logits
         nxt = int(jnp.argmax(logits[0, -1]))
         req.generated.append(nxt)
@@ -157,19 +181,62 @@ class Engine:
         return slot
 
     # ------------------------------------------------------------- serving
-    def _sync_translation(self) -> None:
+    def _sync_translation(self, full: bool = False) -> None:
+        """Upload TAR/SF/flex changes.
+
+        First call (or ``full=True``) uploads everything; afterwards only
+        the entries dirtied since the previous sync are scattered — three
+        bounded-size dispatches instead of re-streaming the whole tables.
+        """
         m = self.manager
-        self.dstate["tar"] = jnp.asarray(m.tar)[None]
-        self.dstate["sf"] = jnp.asarray(m.sf)[None]
-        self.dstate["flex"] = jnp.asarray(m.flex_table.reshape(-1))[None]
+        if full or not self._synced_full:
+            m.take_dirty()             # everything is covered below
+            self.dstate["tar"] = jnp.asarray(m.tar)[None]
+            self.dstate["sf"] = jnp.asarray(m.sf)[None]
+            self.dstate["flex"] = jnp.asarray(m.flex_table.reshape(-1))[None]
+            self._synced_full = True
+            return
+        sets, flex_idx = m.take_dirty()
+        if sets.size:
+            # pad to pow2 with a duplicate index (same value — benign)
+            sets = _pad_pow2(sets, sets[0])
+            js = jnp.asarray(sets)
+            self.dstate["tar"] = self.dstate["tar"].at[0, js].set(
+                jnp.asarray(m.tar[sets]))
+            self.dstate["sf"] = self.dstate["sf"].at[0, js].set(
+                jnp.asarray(m.sf[sets]))
+        if flex_idx.size:
+            flex_idx = _pad_pow2(flex_idx, flex_idx[0])
+            jf = jnp.asarray(flex_idx)
+            self.dstate["flex"] = self.dstate["flex"].at[0, jf].set(
+                jnp.asarray(m.flex_table.reshape(-1)[flex_idx]))
 
     def _apply_copies(self) -> None:
+        """Apply pending slot migrations as ONE gather/scatter per pool.
+
+        Chains inside a drain (a->b, b->c) are resolved host-side to the
+        original source so the batched gather reads pre-copy contents with
+        sequential semantics.
+        """
         copies = self.manager.take_pending_copies()
+        if not copies:
+            return
+        root: Dict[int, int] = {}
         for src, dst in copies:
-            self.dstate["k_pool"] = self.dstate["k_pool"].at[:, dst].set(
-                self.dstate["k_pool"][:, src])
-            self.dstate["v_pool"] = self.dstate["v_pool"].at[:, dst].set(
-                self.dstate["v_pool"][:, src])
+            root[dst] = root.get(src, src)
+        pairs = [(d, s) for d, s in root.items() if d != s]
+        if not pairs:
+            return
+        # pad to pow2 by duplicating the first pair (duplicate scatter
+        # index with the same value — benign): bounded scatter shapes
+        dst = _pad_pow2(np.asarray([d for d, _ in pairs], np.int32),
+                        pairs[0][0])
+        src = _pad_pow2(np.asarray([s for _, s in pairs], np.int32),
+                        pairs[0][1])
+        dst, src = jnp.asarray(dst), jnp.asarray(src)
+        for key in ("k_pool", "v_pool"):
+            pool = self.dstate[key]
+            self.dstate[key] = pool.at[:, dst].set(pool[:, src])
 
     def step(self) -> Dict[int, int]:
         """One decode step for all live sequences."""
@@ -178,11 +245,12 @@ class Engine:
             return {}
         m = self.manager
         bs = self.cfg.kv_block_size
-        # allocate current blocks at boundaries; gather last tokens
+        # allocate current blocks at boundaries; gather last tokens —
+        # all from host state, no device reads
         tokens = np.zeros(self.max_batch, np.int64)
         for r in live:
             slot = self._slot_of[r.seq_id]
-            pos = int(self.dstate["ctx_len"][slot])
+            pos = int(self._ctx_host[slot])
             if self._n_attn_layers and pos % bs == 0:
                 info = m.allocate_block(r.seq_id, pos // bs)
                 if info.seg == 2:
@@ -191,28 +259,39 @@ class Engine:
         self._apply_copies()
         self._sync_translation()
 
-        logits, self.dstate = self._serve_step(
+        logits, self.dstate, tstats = self._serve_step(
             self.params, self.dstate, jnp.asarray(tokens))
 
-        # feed translation stats back (PTW-cost tracking) + promotions
-        if self._n_attn_layers and self.track_stats:
-            from repro.core import translate
-            ts = m.device_state()
-            for r in live:
-                slot = self._slot_of[r.seq_id]
-                pos = int(self.dstate["ctx_len"][slot])
-                nblk = (pos + bs - 1) // bs
-                vpns = np.array([m.cfg.vpn(slot, b) for b in range(nblk)])
-                res = translate(ts, jnp.asarray(vpns, jnp.int32))
-                m.record_device_stats(vpns, np.asarray(res.in_rest),
-                                      np.asarray(res.accesses))
+        # ---- the step's ONE device->host fetch --------------------------
+        fetch = {"next": tstats["next_token"],
+                 "ctx": self.dstate["ctx_len"]}
+        want_stats = self._n_attn_layers and self.track_stats
+        if want_stats:
+            fetch["in_rest"] = tstats["in_rest"]
+            fetch["accesses"] = tstats["accesses"]
+        host = jax.device_get(fetch)
+        self._ctx_host[:] = host["ctx"]
+
+        # ---- feed translation telemetry back (PTW-cost tracking) --------
+        if want_stats:
+            nblk = self.spec.max_blocks_per_seq
+            live_mask = np.zeros(self.max_batch, bool)
+            live_mask[[self._slot_of[r.seq_id] for r in live]] = True
+            n_alloc = (self._ctx_host + bs - 1) // bs    # post-step blocks
+            valid = (live_mask[:, None]
+                     & (np.arange(nblk)[None, :] < n_alloc[:, None]))
+            vpns = (np.arange(self.max_batch)[:, None] * nblk
+                    + np.arange(nblk)[None, :])
+            m.record_device_stats(vpns[valid],
+                                  host["in_rest"][0][valid],
+                                  host["accesses"][0][valid])
             m.run_promotions()
             self._apply_copies()
 
         out = {}
         for r in live:
             slot = self._slot_of[r.seq_id]
-            nxt = int(jnp.argmax(logits[slot]))
+            nxt = int(host["next"][slot])
             r.generated.append(nxt)
             out[r.seq_id] = nxt
             if len(r.generated) >= r.max_new_tokens:
@@ -223,6 +302,7 @@ class Engine:
         self.manager.free_sequence(seq_id)
         slot = self._slot_of.pop(seq_id)
         self.dstate["ctx_len"] = self.dstate["ctx_len"].at[slot].set(0)
+        self._ctx_host[slot] = 0
         self.requests.pop(seq_id, None)
         self._sync_translation()
 

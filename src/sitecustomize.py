@@ -1,0 +1,25 @@
+"""Auto-installed compatibility shims (see repro/compat.py).
+
+Python imports the FIRST ``sitecustomize`` on ``sys.path`` at interpreter
+startup; every entry point in this repo runs with ``PYTHONPATH=src``, so
+this file transparently upgrades older jax installs to the API surface
+the code expects — including for test subprocesses that import
+``jax.sharding.AxisType`` before any ``repro`` module (which a
+package-__init__ hook could not reach).
+
+Trade-off, recorded deliberately: with ``src`` on the path this shadows
+any venv/distro sitecustomize (none ships in this repo's container), and
+it imports jax in every process inheriting the path.  ``XLA_FLAGS`` is
+still honored because XLA reads it lazily at backend init, not at import
+(verified; see repro/compat.py).
+
+Only ImportError (jax absent) is swallowed; a genuine shim failure must
+surface here, not as a confusing late AttributeError.
+"""
+try:
+    import jax  # noqa: F401  (absent jax = nothing to shim)
+    from repro import compat as _compat
+except ImportError:  # pragma: no cover - jax (or repro) not importable
+    pass
+else:
+    _compat.install()

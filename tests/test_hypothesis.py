@@ -1,6 +1,10 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+# hypothesis is an optional dev dependency: skip (not error) when absent
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st, HealthCheck
 
 from repro.core import (HybridConfig, HybridKVManager, get_hash, HASHES,

@@ -138,7 +138,7 @@ SPMD_SCRIPT = textwrap.dedent("""
     tokens = jnp.asarray(rng.randint(0, cfg.vocab_size, B), jnp.int32)
     step1 = jax.jit(make_serve_step(cfg, dims, spec1, mesh=None,
                                     dtype=jnp.float32))
-    logits_ref, _ = step1(params, st1, tokens)
+    logits_ref, _, _ = step1(params, st1, tokens)
 
     # sharded: 2x4 mesh; same logical state rearranged into 2 groups
     mesh = jax.make_mesh((G, TP), ("data", "model"),
@@ -171,7 +171,7 @@ SPMD_SCRIPT = textwrap.dedent("""
         p_sh = param_shardings(jax.eval_shape(lambda: params), rules, mesh)
         d_sh = decode_state_shardings(
             jax.eval_shape(lambda: st2), mesh, spec2)
-        logits_spmd, _ = jax.jit(step2)(params, st2, tokens)
+        logits_spmd, _, _ = jax.jit(step2)(params, st2, tokens)
     np.testing.assert_allclose(np.asarray(logits_spmd),
                                np.asarray(logits_ref), rtol=2e-3, atol=2e-3)
     print("SPMD_DECODE_MATCHES")
