@@ -1,9 +1,13 @@
-"""End-to-end driver: serve a small model with batched requests.
+"""End-to-end driver: serve a stream of requests through the admission
+scheduler.
 
-Continuous batching over the Utopia hybrid-translated KV pool: staggered
-request admission, prefix sharing between related prompts, block
-allocation/eviction/promotion live, and the manager's translation
-statistics printed at the end (the serving analogue of the paper's §8
+Continuous batching over the Utopia hybrid-translated KV pool: more
+requests than batch slots are submitted up front, the engine admits them
+under a per-step prefill token budget (a long prompt is CHUNKED across
+steps so it interleaves with decode instead of stalling it), finished
+sequences auto-release so their slots recycle, prefix sharing links
+related prompts (FlexSeg refcounts), and the manager's translation
+statistics print at the end (the serving analogue of the paper's §8
 analysis).
 
 Run:  PYTHONPATH=src python examples/serve_engine.py
@@ -23,33 +27,40 @@ def main() -> None:
     dims = model_dims(cfg, tp=1)
     params = init_params(jax.random.PRNGKey(0), cfg, dims)
     bs = cfg.kv_block_size
-    eng = Engine(cfg, params, max_batch=4, max_seq_len=8 * bs)
+    # budget = 2 blocks/step: the 6-block prompt below takes 3 admission
+    # steps, decoding the already-live sequences in between
+    eng = Engine(cfg, params, max_batch=3, max_seq_len=10 * bs,
+                 prefill_budget=2 * bs, auto_release=True)
     rng = np.random.RandomState(0)
 
     system_prompt = rng.randint(0, cfg.vocab_size, 2 * bs)
     eng.add_request(Request(seq_id=0, prompt=system_prompt,
-                            max_new_tokens=12))
+                            max_new_tokens=10))
     # second request shares the system-prompt prefix (FlexSeg refcounts)
-    eng.add_request(Request(seq_id=1, prompt=system_prompt,
-                            max_new_tokens=12),
-                    share_prefix_from=0, shared_blocks=1)
+    eng.submit(Request(seq_id=1, prompt=system_prompt, max_new_tokens=10),
+               share_prefix_from=0, shared_blocks=1)
+    # long prompt: chunked over three steps under the 2-block budget
+    eng.submit(Request(seq_id=2, prompt=rng.randint(0, cfg.vocab_size,
+                                                    6 * bs),
+                       max_new_tokens=6))
+    # more requests than batch slots: admitted as soon as a slot recycles
+    for sid in (3, 4):
+        eng.submit(Request(seq_id=sid,
+                           prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                           max_new_tokens=6))
 
     t0 = time.time()
     step = 0
-    admitted_third = False
-    while any(not r.done for r in eng.requests.values()):
+    while eng.waiting or any(not r.done for r in eng.requests.values()):
         out = eng.step()
         step += 1
-        if step == 3 and not admitted_third:   # continuous batching
-            prompt = rng.randint(0, cfg.vocab_size, 2 * bs)
-            eng.add_request(Request(seq_id=2, prompt=prompt,
-                                    max_new_tokens=8))
-            admitted_third = True
-        print(f"step {step:2d}: tokens={out}")
+        queued = len(eng.waiting)
+        print(f"step {step:2d}: tokens={out} (queued={queued})")
     dt = time.time() - t0
 
-    print(f"\ngenerated in {dt:.2f}s:")
-    for sid, r in sorted(eng.requests.items()):
+    print(f"\ngenerated in {dt:.2f}s over {step} steps:")
+    everyone = {**eng.finished, **eng.requests}
+    for sid, r in sorted(everyone.items()):
         print(f"  seq {sid}: {r.generated}")
     st = eng.stats()
     total = st.get("rsw_hits", 0) + st.get("flex_walks", 0)

@@ -117,13 +117,20 @@ class HybridKVManager:
 
     # ---------------------------------------------------------- allocation
     def allocate_block(self, seq_id: int, block_idx: int,
-                       writable: bool = True) -> BlockInfo:
-        """Page-fault-based allocation (§5.5): RestSeg first."""
+                       writable: bool = True, *,
+                       count_fault: bool = True) -> BlockInfo:
+        """Page-fault-based allocation (§5.5): RestSeg first.
+
+        ``count_fault=False`` is the swap-in re-entry path: the block
+        already faulted when it was first allocated, so bringing it back
+        must count a ``swap_in`` (Fig. 9), not a fresh fault.
+        """
         s = self.seq_slot(seq_id)
         vpn = self.cfg.vpn(s, block_idx)
         if vpn in self.blocks:
             return self.blocks[vpn]
-        self.stats["faults"] += 1
+        if count_fault:
+            self.stats["faults"] += 1
         if self.cfg.mode != "flexible_only":
             info = self._try_rest_alloc(vpn, writable)
             if info is not None:
@@ -216,6 +223,20 @@ class HybridKVManager:
         self.pending_copies.append((old_slot, new_slot))
         self.stats["migrations_rest_to_flex"] += 1
 
+    def _sync_shared_refcounts(self, slot: int) -> None:
+        """Propagate ``slot_refcount[slot]`` to EVERY BlockInfo mapping the
+        slot.  A shared slot has one BlockInfo per sharing vpn; updating
+        only the src (the pre-fix behaviour) left prior sharers with a
+        stale refcount when a third sequence joined.  The sharers are
+        recovered from the flex table (one vectorized scan), not by
+        sweeping the whole block registry."""
+        rc = self.slot_refcount.get(slot, 0)
+        for s, b in np.argwhere(self.flex_table == slot):
+            info = self.blocks.get(
+                int(s) * self.cfg.max_blocks_per_seq + int(b))
+            if info is not None:
+                info.refcount = rc
+
     def _release(self, vpn: int) -> None:
         info = self.blocks[vpn]
         if info.seg == FLEX:
@@ -226,6 +247,7 @@ class HybridKVManager:
             if self.slot_refcount[info.slot] > 0:
                 # another sequence still references the shared slot
                 del self.blocks[vpn]
+                self._sync_shared_refcounts(info.slot)
                 return
             del self.slot_refcount[info.slot]
             if self.slot_owner[info.slot] == vpn:
@@ -288,6 +310,7 @@ class HybridKVManager:
             s, b = divmod(int(vpn), self.cfg.max_blocks_per_seq)
             self.flex_table[s, b] = -1
             self._dirty_flex.add(int(vpn))
+            self.slot_refcount.pop(old_slot, None)
             self.flex_free.append(old_slot)
             if self.slot_owner[old_slot] == vpn:
                 self.slot_owner[old_slot] = -1
@@ -324,7 +347,10 @@ class HybridKVManager:
             self.blocks[dst_vpn] = BlockInfo(
                 vpn=dst_vpn, seg=FLEX, slot=info.slot,
                 refcount=rc, writable=False)
-            info.refcount = rc
+            # every sharer's BlockInfo must see the new refcount, not just
+            # the src: a third joiner previously left the second with a
+            # stale count
+            self._sync_shared_refcounts(info.slot)
             info.writable = False  # copy-on-write semantics after sharing
             self.stats["shared_blocks"] += 1
             shared += 1
@@ -363,7 +389,8 @@ class HybridKVManager:
             raise ValueError(f"vpn {vpn} not in swap")
         self.stats["swap_in"] += 1
         del self.blocks[vpn]
-        return self.allocate_block(seq_id, block_idx, info.writable)
+        return self.allocate_block(seq_id, block_idx, info.writable,
+                                   count_fault=False)
 
     # ------------------------------------------------------------- lookups
     def lookup(self, seq_id: int, block_idx: int) -> Tuple[int, int]:
@@ -428,6 +455,20 @@ class HybridKVManager:
                 s, b = divmod(vpn, self.cfg.max_blocks_per_seq)
                 assert self.flex_table[s, b] == info.slot, "flex table mismatch"
                 assert info.slot >= self.cfg.rest_slots
+                assert info.refcount == self.slot_refcount.get(info.slot), \
+                    (f"BlockInfo.refcount {info.refcount} stale for slot "
+                     f"{info.slot} (slot_refcount="
+                     f"{self.slot_refcount.get(info.slot)})")
         mapped_flex = set(int(x) for x in self.flex_table.ravel() if x >= 0)
         free_flex = set(self.flex_free)
         assert not (mapped_flex & free_flex), "slot both mapped and free"
+        # slot_refcount must equal flex-table occupancy exactly: each
+        # refcount is the number of (seq, block) flex entries mapping the
+        # slot, and no freed/promoted slot may keep a stale count
+        occ: Dict[int, int] = defaultdict(int)
+        for x in self.flex_table.ravel():
+            if x >= 0:
+                occ[int(x)] += 1
+        rc = {s: c for s, c in self.slot_refcount.items() if c != 0}
+        assert rc == dict(occ), \
+            f"slot_refcount {rc} != flex-table occupancy {dict(occ)}"

@@ -37,8 +37,17 @@ def _rsw_kernel(vpn_ref, tar_ref, sf_ref, flex_ref, slot_ref, in_rest_ref,
     set_idx = h(vpn, n_sets).astype(jnp.int32)          # (tile,)
 
     # --- set filtering (SF probe) + tag matching via one-hot MXU matmul ---
+    # The row gather stays a one-hot matmul (MXU, DESIGN.md
+    # §TAR-match-one-hot), but a tag (vpn+1) can exceed 2^24 and would
+    # round in a float32 matmul, mis-hitting.  Each 16-bit half is exactly
+    # representable in float32 (a one-hot row selects a single value, so
+    # the accumulation is also exact); the halves recombine in int32 and
+    # the tag compare itself never leaves integer land.
     onehot = jax.nn.one_hot(set_idx, n_sets, dtype=jnp.float32)  # (tile, n_sets)
-    tags = (onehot @ tar.astype(jnp.float32)).astype(jnp.int32)  # (tile, assoc)
+    tar_lo = (tar & 0xFFFF).astype(jnp.float32)
+    tar_hi = ((tar >> 16) & 0xFFFF).astype(jnp.float32)
+    tags = ((onehot @ tar_lo).astype(jnp.int32)
+            | ((onehot @ tar_hi).astype(jnp.int32) << 16))        # (tile, assoc)
     counters = (onehot @ sf.astype(jnp.float32)[:, None]
                 ).astype(jnp.int32)[:, 0]                        # (tile,)
     eq = tags == (vpn[:, None] + 1)

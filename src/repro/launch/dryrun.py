@@ -168,11 +168,15 @@ def build_cell(arch: str, shape_name: str, multi_pod: bool,
         nblk = seq_eff // spec.block_size
         slots_abs = sd((B, nblk), jnp.int32)
         slots_sh = NamedSharding(mesh, P(da, None))
+        row_abs = sd((B,), jnp.int32)       # slot_ids / ctx / last_pos
+        row_sh = NamedSharding(mesh, P(da))
         with mesh:
             lowered = jax.jit(step, in_shardings=(
-                params_sh, dstate_sh, batch_sh, slots_sh),
+                params_sh, dstate_sh, batch_sh, slots_sh,
+                row_sh, row_sh, row_sh),
                 donate_argnums=(1,)
-                ).lower(params_abs, dstate_abs, batch_abs, slots_abs)
+                ).lower(params_abs, dstate_abs, batch_abs, slots_abs,
+                        row_abs, row_abs, row_abs)
         return lowered, meta
 
     if shape.kind == "decode":

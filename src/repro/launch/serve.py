@@ -1,10 +1,14 @@
 """Serving launcher: continuous batching over the hybrid KV pool.
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b \\
-        --requests 4 --max-new 16 [--mode hybrid|flexible_only|restrictive_only]
+        --requests 8 --max-new 16 [--mode hybrid|flexible_only|restrictive_only] \\
+        [--prefill-budget 128]
 
-Runs the engine with synthetic prompts and prints throughput plus the
-translation statistics (RSW hit rate, migrations, swaps).
+Drives the admission scheduler: all requests are submitted up front, the
+engine admits them under the per-step prefill token budget (chunking
+prompts longer than the budget), finished sequences auto-release so their
+slots recycle, and the run prints throughput plus the translation
+statistics (RSW hit rate, migrations, swaps).
 """
 from __future__ import annotations
 
@@ -22,9 +26,13 @@ from repro.serve import Engine, Request
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--prompt-blocks", type=int, default=2)
+    ap.add_argument("--prefill-budget", type=int, default=None,
+                    help="prompt tokens admitted per engine step "
+                         "(default: 4 * block_size * max_batch)")
     ap.add_argument("--mode", default="hybrid",
                     choices=["hybrid", "flexible_only", "restrictive_only"])
     ap.add_argument("--reduced", action="store_true", default=True)
@@ -36,26 +44,29 @@ def main() -> None:
     params = init_params(jax.random.PRNGKey(0), cfg, dims)
     bs = cfg.kv_block_size
     S = args.prompt_blocks * bs
-    eng = Engine(cfg, params, max_batch=args.requests,
+    eng = Engine(cfg, params, max_batch=args.max_batch,
                  max_seq_len=S + cfg.frontend_tokens + args.max_new + bs,
-                 mode=args.mode)
+                 mode=args.mode, prefill_budget=args.prefill_budget,
+                 auto_release=True)
     rng = np.random.RandomState(0)
     t0 = time.time()
     for sid in range(args.requests):
         frontend = (rng.randn(cfg.frontend_tokens, cfg.d_model)
                     .astype(np.float32) if cfg.frontend != "none" else None)
-        eng.add_request(Request(
+        eng.submit(Request(
             seq_id=sid, prompt=rng.randint(0, cfg.vocab_size, S),
             frontend=frontend, max_new_tokens=args.max_new))
     steps = 0
     tokens = 0
-    while any(not r.done for r in eng.requests.values()):
+    while eng.waiting or any(not r.done for r in eng.requests.values()):
         out = eng.step()
         steps += 1
         tokens += len(out)
     dt = time.time() - t0
-    print(f"arch={cfg.name} mode={args.mode}: {tokens} tokens in {dt:.2f}s "
-          f"({tokens / dt:.1f} tok/s, {steps} engine steps)")
+    print(f"arch={cfg.name} mode={args.mode}: {args.requests} requests, "
+          f"{tokens} tokens in {dt:.2f}s "
+          f"({tokens / dt:.1f} tok/s, {steps} engine steps, "
+          f"budget={eng.prefill_budget} tok/step)")
     st = eng.stats()
     total = st.get("rsw_hits", 0) + st.get("flex_walks", 0)
     print(f"translation: rsw_hit_rate="

@@ -371,6 +371,14 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
     greedy ``next_token`` (B,) — everything the engine needs from the
     device in ONE fetch.  Translation runs exactly once, before the layer
     scan (see ``translate_step``).
+
+    ``active`` (B,) bool (optional) marks the batch slots that are
+    decoding this step.  Inactive slots — mid-prefill under the chunked
+    admission scheduler, released, or already finished — neither write
+    their current KV block (their drifting position could land inside a
+    *mapped* block another chunk just installed) nor advance ``ctx_len``.
+    ``active=None`` (the pre-scheduler calling convention) treats every
+    slot as live.
     """
 
     def qkv_decode(blk, x, positions):
@@ -433,8 +441,10 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
 
     n_attn = sum(cfg.attn_on_layer(l) for l in range(cfg.num_layers))
 
-    def serve_step(params, dstate, tokens):
+    def serve_step(params, dstate, tokens, active=None):
         positions = dstate["ctx_len"]
+        act = (jnp.ones_like(positions, jnp.bool_) if active is None
+               else active.astype(jnp.bool_))
         x = jnp.take(params["embed"]["table"], tokens, axis=0).astype(dtype)
         x = pins("dec_bd", x)
         fam = cfg.family
@@ -446,6 +456,13 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
         if n_attn:
             trans = translate_step(dstate["tar"], dstate["sf"],
                                    dstate["flex"], positions, spec)
+            # group-major view of the active mask gates the KV write
+            G = dstate["tar"].shape[0]
+            if spec.mode == "batch":
+                act_g = act.reshape(G, -1)
+            else:
+                act_g = jnp.broadcast_to(act[None, :], (G, act.shape[0]))
+            trans = trans._replace(w_valid=trans.w_valid & act_g)
             stats.update(slots=trans.slots, in_rest=trans.in_rest,
                          mapped=trans.mapped, accesses=trans.accesses)
 
@@ -487,7 +504,12 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                 return x, {"ssm": s, "conv": c}
 
             x, ys = jax.lax.scan(body, x, xs)
-            new_state["ssm"], new_state["conv"] = ys["ssm"], ys["conv"]
+            # inactive rows keep their recurrent state (the scan advanced
+            # every row with whatever token the engine padded in)
+            new_state["ssm"] = jnp.where(
+                act[None, :, None, None, None], ys["ssm"], dstate["ssm"])
+            new_state["conv"] = jnp.where(
+                act[None, :, None, None], ys["conv"], dstate["conv"])
         elif fam == "hybrid":
             g = cfg.attn_every
             n_groups = cfg.num_layers // g
@@ -536,8 +558,12 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
             (x, kp, vp), ys = jax.lax.scan(
                 body, (x, dstate["k_pool"], dstate["v_pool"]), xs)
             new_state["k_pool"], new_state["v_pool"] = kp, vp
-            new_state["ssm"] = ys["ssm"].reshape(dstate["ssm"].shape)
-            new_state["conv"] = ys["conv"].reshape(dstate["conv"].shape)
+            new_state["ssm"] = jnp.where(
+                act[None, :, None, None, None],
+                ys["ssm"].reshape(dstate["ssm"].shape), dstate["ssm"])
+            new_state["conv"] = jnp.where(
+                act[None, :, None, None],
+                ys["conv"].reshape(dstate["conv"].shape), dstate["conv"])
         else:
             raise ValueError(fam)
 
@@ -553,7 +579,11 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
         # greedy sampling in-graph: the engine reads the token ids, not the
         # (B, V) logits, so the per-step fetch stays O(B)
         stats["next_token"] = jnp.argmax(logits, axis=-1).astype(jnp.int32)
-        new_state["ctx_len"] = dstate["ctx_len"] + 1
+        # only active slots advance: an idle slot's ctx_len must not drift
+        # (pre-scheduler it advanced unconditionally, which is why the
+        # stale-write bound in translate_step exists)
+        new_state["ctx_len"] = (dstate["ctx_len"]
+                                + act.astype(dstate["ctx_len"].dtype))
         return logits, new_state, stats
 
     return serve_step

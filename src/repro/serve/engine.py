@@ -2,8 +2,15 @@
 
 The engine is the "operating system" of the serving stack (paper §5.6):
 
-* admission: prefill a prompt, allocate its KV blocks fault-based (straight
-  into the RestSeg), install K/V into the pool slots the manager assigned;
+* admission: a waiting queue plus a per-step *prefill token budget*
+  (DESIGN.md §admission-scheduler).  ``submit()`` enqueues; every
+  ``step()`` admits up to the budget, bucketing variable-length prompts
+  into padded power-of-two length buckets (bounded compile shapes, the
+  ``_pad_pow2`` trick applied to whole prompts) and installing ALL
+  admitted sequences' KV blocks with one batched prefill dispatch per
+  bucket.  Prompts longer than the budget are *chunked*: each step
+  installs the next budget's worth of blocks, so a long prompt
+  interleaves with decode instead of stalling it;
 * steady state: every decode step (i) allocates the current block when a
   sequence crosses a block boundary, (ii) scatters the *dirty deltas* of
   TAR/SF/flex to the device (only entries that changed since the last
@@ -12,6 +19,10 @@ The engine is the "operating system" of the serving stack (paper §5.6):
   that telemetry back to the manager (PTW-cost tracking) with no extra
   translation, (v) applies any pending slot-to-slot migrations as ONE
   batched gather/scatter (the DMA page copies of Fig. 16);
+* termination: a sequence finishes on its ``max_new_tokens`` budget or on
+  its ``eos_token``; with ``auto_release=True`` the engine frees its
+  sequence slot and KV blocks immediately (results stay readable in
+  ``finished``), so slots recycle under sustained load;
 * prefix sharing between requests with a common prompt prefix (FlexSeg
   refcounts — the paper's inter-process page sharing);
 * eviction/swap: pool exhaustion surfaces as swap events exactly as in the
@@ -20,27 +31,30 @@ The engine is the "operating system" of the serving stack (paper §5.6):
 Hot-path contract (DESIGN.md §translate-once): the steady-state ``step()``
 performs a BOUNDED number of host<->device transfers — at most three
 dirty-delta scatters, two pool copy dispatches, the step dispatch itself,
-and ONE device_get of {next tokens, ctx lengths, telemetry} — independent
-of batch size, sequence count, or pending-copy count.
+and ONE device_get — independent of batch size, sequence count, or
+pending-copy count.  Admission steps add one prefill dispatch per length
+bucket, but the fetch stays single: prefill first-tokens ride in the same
+``device_get`` as the decode telemetry.
 
-Single-host configuration (G = 1 data group); the SPMD decode step in
-serve/decode.py is the same code the launcher shards across a pod.
+Single-host configuration (G = 1 data group); the SPMD prefill/decode
+steps in serve/prefill.py and serve/decode.py are the same code the
+launcher shards across a pod.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from collections import defaultdict, deque
+from typing import Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
-from repro.core import HybridConfig, HybridKVManager
-from repro.models import FwdOptions, forward, model_dims
-from repro.models.transformer import ModelDims
-from .decode import (DecodeSpec, make_serve_step, init_decode_state,
-                     make_decode_spec)
+from repro.core import HybridConfig, HybridKVManager, PoolExhausted, SWAP
+from repro.models import FwdOptions, model_dims
+from .decode import DecodeSpec, make_serve_step, init_decode_state
+from .prefill import make_prefill_step
 
 
 def _pad_pow2(idx: np.ndarray, fill) -> np.ndarray:
@@ -53,12 +67,17 @@ def _pad_pow2(idx: np.ndarray, fill) -> np.ndarray:
     return np.concatenate([idx, np.full(n - idx.size, fill, idx.dtype)])
 
 
+def _next_pow2(n: int) -> int:
+    return 1 << max(0, int(n - 1).bit_length())
+
+
 @dataclasses.dataclass
 class Request:
     seq_id: int
     prompt: np.ndarray
     frontend: Optional[np.ndarray] = None
     max_new_tokens: int = 16
+    eos_token: Optional[int] = None
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
 
@@ -68,7 +87,9 @@ class Engine:
                  max_seq_len: int = 256, pool_headroom: float = 1.25,
                  mode: str = "hybrid", attn_impl: str = "dense",
                  dtype=jnp.float32, restseg_fraction: float = 0.75,
-                 track_stats: bool = True):
+                 track_stats: bool = True,
+                 prefill_budget: Optional[int] = None,
+                 auto_release: bool = False):
         self.cfg = cfg
         self.dims = model_dims(cfg, tp=1)
         self.params = params
@@ -90,95 +111,208 @@ class Engine:
         self.dstate = init_decode_state(cfg, self.dims, self.spec,
                                         max_batch, 1, dtype=dtype)
         self.max_batch = max_batch
+        # tokens of NEW prompt admitted per step; chunk granularity is the
+        # KV block, so the effective budget is floor(budget / bs) blocks
+        self.prefill_budget = (prefill_budget if prefill_budget is not None
+                               else 4 * bs * max_batch)
+        self.auto_release = auto_release
         self.fwd = FwdOptions(attn_impl=attn_impl, dtype=dtype,
                               collect_cache=True)
         self._serve_step = jax.jit(make_serve_step(
             cfg, self.dims, self.spec, mesh=None, dtype=dtype))
+        # one jitted callable; XLA re-specializes per (bucket_B, bucket_S)
+        # — both power-of-two padded, so the executable set is bounded
+        self._prefill_step = jax.jit(make_prefill_step(
+            cfg, self.dims, self.spec, mesh=None, fwd=self.fwd))
         self.requests: Dict[int, Request] = {}
+        self.finished: Dict[int, Request] = {}
+        self.waiting: Deque[Request] = deque()
         self._slot_of: Dict[int, int] = {}
+        self._prefilling: Dict[int, int] = {}   # seq_id -> tokens installed
+        self._share: Dict[int, Tuple[int, int]] = {}
         self._n_attn_layers = sum(cfg.attn_on_layer(l)
                                   for l in range(cfg.num_layers))
+        self._has_recurrent = cfg.family in ("ssm", "hybrid")
         # host mirror of ctx_len: block-boundary checks must not read the
         # device array per request (that is one D2H sync per sequence)
         self._ctx_host = np.zeros(max_batch, np.int64)
         self._synced_full = False
 
     # ------------------------------------------------------------ admission
-    def add_request(self, req: Request,
-                    share_prefix_from: Optional[int] = None,
-                    shared_blocks: int = 0) -> int:
-        m = self.manager
-        slot = m.register_sequence(req.seq_id)
-        self._slot_of[req.seq_id] = slot
-        self.requests[req.seq_id] = req
+    def submit(self, req: Request, share_prefix_from: Optional[int] = None,
+               shared_blocks: int = 0) -> None:
+        """Enqueue a request; ``step()`` admits it under the token budget."""
         bs = self.cfg.kv_block_size
-        prompt = np.asarray(req.prompt)
-        S = len(prompt)
+        S = len(np.asarray(req.prompt))
+        if S == 0:
+            raise ValueError("empty prompt: an unadmittable request would "
+                             "stall the FIFO queue head forever")
         if S % bs:
             raise ValueError(f"prompt length {S} must be a multiple of the "
                              f"KV block size {bs} (pad upstream)")
+        front = self._front_tokens()
+        if front % bs:
+            raise ValueError(f"frontend length {front} must be a multiple "
+                             f"of the KV block size {bs}")
         if share_prefix_from is not None and shared_blocks:
-            m.share_prefix(share_prefix_from, req.seq_id, shared_blocks)
-            # drain migration copies NOW: the freed RestSeg slots may be
-            # reallocated by the prefill below, and a stale deferred copy
-            # would then clobber the shared slot (ordering invariant:
-            # copies apply before any further pool mutation)
-            self._apply_copies()
+            self._share[req.seq_id] = (share_prefix_from, shared_blocks)
+        self.waiting.append(req)
 
-        # ---- prefill forward: logits + caches ----
-        batch = {"tokens": jnp.asarray(prompt)[None, :]}
-        if req.frontend is not None:
-            batch["frontend"] = jnp.asarray(req.frontend)[None]
-        logits, _, caches = forward(self.params, batch, self.cfg, self.dims,
-                                    self.fwd)
-        # ---- install attention KV blocks (vlm: includes image prefix) ----
-        if self._n_attn_layers and caches.get("k") is not None:
-            k = caches["k"]            # (L_attn, 1, S_total, KV, hd)
-            v = caches["v"]
-            S_inst = k.shape[2]
-            if S_inst % bs:
-                raise ValueError(f"cache length {S_inst} (prompt+prefix) "
-                                 f"must divide block size {bs}")
-            nblk = S_inst // bs
-            k = k.reshape(k.shape[0], nblk, bs, k.shape[3], k.shape[4])
-            v = v.reshape(v.shape[0], nblk, bs, v.shape[3], v.shape[4])
-            slots = []
-            for b in range(nblk):
-                info = m.allocate_block(req.seq_id, b)
-                if info.seg == 2:       # SWAP: pool exhausted
-                    raise RuntimeError("pool exhausted during prefill")
-                slots.append(info.slot)
-            # allocation-time evictions queued copies: drain before scatter
-            self._apply_copies()
-            slots = jnp.asarray(slots, jnp.int32)
-            self.dstate["k_pool"] = self.dstate["k_pool"].at[:, slots].set(
-                k.astype(self.dstate["k_pool"].dtype))
-            self.dstate["v_pool"] = self.dstate["v_pool"].at[:, slots].set(
-                v.astype(self.dstate["v_pool"].dtype))
-        # ---- install recurrent caches ----
-        if "ssm" in caches and caches["ssm"] is not None:
-            ssm = caches["ssm"]
-            conv = ssm.conv if hasattr(ssm, "conv") else None
-            state = ssm.state if hasattr(ssm, "state") else ssm
-            st = state.reshape((-1,) + state.shape[-4:])
-            cv = conv.reshape((-1,) + conv.shape[-3:])
-            self.dstate["ssm"] = self.dstate["ssm"].at[:, slot].set(st[:, 0])
-            self.dstate["conv"] = self.dstate["conv"].at[:, slot].set(
-                cv[:, 0].astype(self.dstate["conv"].dtype))
-        if self.cfg.is_encoder_decoder:
-            self.dstate["cross_k"] = self.dstate["cross_k"].at[:, slot].set(
-                caches["ck"][:, 0].astype(self.dstate["cross_k"].dtype))
-            self.dstate["cross_v"] = self.dstate["cross_v"].at[:, slot].set(
-                caches["cv"][:, 0].astype(self.dstate["cross_v"].dtype))
-        ctx0 = S + (self.cfg.frontend_tokens if self.cfg.family == "vlm"
-                    else 0)
-        self.dstate["ctx_len"] = self.dstate["ctx_len"].at[slot].set(ctx0)
-        self._ctx_host[slot] = ctx0
-        # first generated token from prefill logits
-        nxt = int(jnp.argmax(logits[0, -1]))
-        req.generated.append(nxt)
-        self._sync_translation()
+    def add_request(self, req: Request,
+                    share_prefix_from: Optional[int] = None,
+                    shared_blocks: int = 0) -> int:
+        """Legacy blocking admission: enqueue, then prefill the whole
+        prompt immediately (draining anything queued ahead of it)."""
+        self.submit(req, share_prefix_from, shared_blocks)
+        pending = self._admit(budget=None)
+        if any(r is req for r in self.waiting):   # could not even register
+            raise PoolExhausted("no free sequence slot for blocking "
+                                "add_request; release a sequence first")
+        slot = self._slot_of[req.seq_id]   # before auto-release can free it
+        host = jax.device_get({f"p{r.seq_id}": t for r, t in pending})
+        for r, _ in pending:
+            self._complete_prefill(r, int(host[f"p{r.seq_id}"]))
         return slot
+
+    def _front_tokens(self) -> int:
+        """Frontend tokens that occupy KV blocks (vlm image prefix; the
+        audio frontend lives in the encoder, not the decoder cache)."""
+        return self.cfg.frontend_tokens if self.cfg.family == "vlm" else 0
+
+    def _admit(self, budget: Optional[int]
+               ) -> List[Tuple[Request, jnp.ndarray]]:
+        """Admit waiting prompts up to ``budget`` NEW tokens (None =
+        unbounded), in FIFO order, chunked at KV-block granularity.
+
+        Returns [(request, in-graph first-token array)] for every request
+        whose FINAL chunk was installed this call; the caller folds the
+        arrays into its single device fetch.
+        """
+        if not self.waiting:
+            return []
+        m = self.manager
+        bs = self.cfg.kv_block_size
+        if budget is None:
+            budget = sum(len(np.asarray(r.prompt)) for r in self.waiting)
+        chunks: List[Tuple[Request, int, int, bool]] = []
+        while self.waiting and budget >= bs:
+            req = self.waiting[0]
+            if req.seq_id not in self._slot_of:
+                if not m._free_seq_slots:
+                    break                      # wait for a release
+                slot = m.register_sequence(req.seq_id)
+                self._slot_of[req.seq_id] = slot
+                self.requests[req.seq_id] = req
+                self._prefilling[req.seq_id] = 0
+                share = self._share.pop(req.seq_id, None)
+                # the source may have finished and auto-released while the
+                # sharer waited in the queue: sharing is an optimization,
+                # so fall back to plain (recomputed) prefill, not a crash
+                if share is not None and share[0] in m._seq_ids:
+                    m.share_prefix(share[0], req.seq_id, share[1])
+                    # drain migration copies NOW: the freed RestSeg slots
+                    # may be reallocated by the prefill below, and a stale
+                    # deferred copy would then clobber the shared slot
+                    self._apply_copies()
+            start = self._prefilling[req.seq_id]
+            total = len(np.asarray(req.prompt))
+            take = min(total - start, budget // bs * bs)
+            if take <= 0:
+                break
+            end = start + take
+            budget -= take
+            self._prefilling[req.seq_id] = end
+            final = end == total
+            chunks.append((req, start, end, final))
+            if final:
+                self.waiting.popleft()
+            # a partial chunk leaves the request at the queue head with
+            # budget < bs, ending the loop: it continues next step
+
+        # ---- bucket by padded prefix length; one dispatch per bucket ----
+        # Right padding is exact ONLY under causal attention; a recurrent
+        # (SSM/conv) state integrates the pad tokens, so ssm/hybrid
+        # families bucket at EXACT block-aligned lengths instead of pow2
+        # (more compile shapes, but correct state installs).
+        pending: List[Tuple[Request, jnp.ndarray]] = []
+        buckets: Dict[int, list] = defaultdict(list)
+        for ch in chunks:
+            end_blk = ch[2] // bs
+            s_pad = (ch[2] if self._has_recurrent
+                     else bs * _next_pow2(end_blk))
+            buckets[s_pad].append(ch)
+        front = self._front_tokens()
+        for s_pad, grp in sorted(buckets.items()):
+            pending.extend(self._prefill_bucket(grp, s_pad, front))
+        return pending
+
+    def _prefill_bucket(self, grp, s_pad: int, front: int):
+        """Allocate blocks and run ONE batched prefill dispatch for a
+        bucket of same-padded-length chunks."""
+        m = self.manager
+        bs = self.cfg.kv_block_size
+        B_pad = _next_pow2(len(grp))
+        nblk_cache = (front + s_pad) // bs
+        tokens = np.zeros((B_pad, s_pad), np.int64)
+        slots = -np.ones((B_pad, nblk_cache), np.int32)
+        slot_ids = np.full(B_pad, -1, np.int32)
+        ctx = np.zeros(B_pad, np.int32)
+        last_pos = np.zeros(B_pad, np.int32)
+        frontend = None
+        if self.cfg.frontend != "none":
+            frontend = np.zeros((B_pad, self.cfg.frontend_tokens,
+                                 self.cfg.d_model), np.float32)
+        for i, (req, start, end, final) in enumerate(grp):
+            prompt = np.asarray(req.prompt)
+            tokens[i, :end] = prompt[:end]
+            slot_ids[i] = self._slot_of[req.seq_id]
+            ctx[i] = end + front
+            last_pos[i] = end - 1
+            if frontend is not None:
+                frontend[i] = req.frontend
+            # new cache blocks this chunk (the first chunk also covers the
+            # frontend prefix); blocks already mapped — earlier chunks,
+            # shared prefix — install nothing.  Attention-free families
+            # have no KV blocks to translate (DESIGN.md
+            # §Arch-applicability), so nothing is allocated either.
+            if not self._n_attn_layers:
+                continue
+            cb0 = (front + start) // bs if start else 0
+            for cb in range(cb0, (front + end) // bs):
+                if m.lookup(req.seq_id, cb)[0] >= 0:
+                    continue
+                info = m.allocate_block(req.seq_id, cb)
+                if info.seg == SWAP:
+                    raise RuntimeError("pool exhausted during prefill")
+                slots[i, cb] = info.slot
+        # allocation-time evictions queued copies: drain before the scatter
+        self._apply_copies()
+        batch = {"tokens": jnp.asarray(tokens)}
+        if frontend is not None:
+            batch["frontend"] = jnp.asarray(frontend)
+        _, self.dstate, pstats = self._prefill_step(
+            self.params, self.dstate, batch, jnp.asarray(slots),
+            jnp.asarray(slot_ids), jnp.asarray(ctx), jnp.asarray(last_pos))
+        out = []
+        for i, (req, start, end, final) in enumerate(grp):
+            self._ctx_host[slot_ids[i]] = int(ctx[i])
+            if final:
+                out.append((req, pstats["next_token"][i]))
+        return out
+
+    def _complete_prefill(self, req: Request, nxt: int) -> None:
+        self._prefilling.pop(req.seq_id, None)
+        req.generated.append(nxt)
+        self._maybe_finish(req, nxt)
+
+    def _maybe_finish(self, req: Request, nxt: int) -> None:
+        if req.done:
+            return
+        hit_eos = req.eos_token is not None and nxt == req.eos_token
+        if hit_eos or len(req.generated) >= req.max_new_tokens:
+            req.done = True
+            if self.auto_release and req.seq_id in self._slot_of:
+                self.release(req.seq_id)
 
     # ------------------------------------------------------------- serving
     def _sync_translation(self, full: bool = False) -> None:
@@ -239,63 +373,89 @@ class Engine:
             self.dstate[key] = pool.at[:, dst].set(pool[:, src])
 
     def step(self) -> Dict[int, int]:
-        """One decode step for all live sequences."""
-        live = [r for r in self.requests.values() if not r.done]
-        if not live:
-            return {}
+        """One engine step: admit under the prefill budget, then decode
+        all live sequences.  Returns {seq_id: token} for every sequence
+        that produced a token (prefill completions AND decodes)."""
+        fetch = {}
+        pending = self._admit(self.prefill_budget)
+        for r, tok in pending:
+            fetch[f"p{r.seq_id}"] = tok
+        live = [r for r in self.requests.values()
+                if not r.done and r.seq_id not in self._prefilling]
         m = self.manager
         bs = self.cfg.kv_block_size
-        # allocate current blocks at boundaries; gather last tokens —
-        # all from host state, no device reads
-        tokens = np.zeros(self.max_batch, np.int64)
-        for r in live:
-            slot = self._slot_of[r.seq_id]
-            pos = int(self._ctx_host[slot])
-            if self._n_attn_layers and pos % bs == 0:
-                info = m.allocate_block(r.seq_id, pos // bs)
-                if info.seg == 2:
-                    info = m.swap_in(r.seq_id, pos // bs)
-            tokens[slot] = r.generated[-1]
-        self._apply_copies()
-        self._sync_translation()
-
-        logits, self.dstate, tstats = self._serve_step(
-            self.params, self.dstate, jnp.asarray(tokens))
-
-        # ---- the step's ONE device->host fetch --------------------------
-        fetch = {"next": tstats["next_token"],
-                 "ctx": self.dstate["ctx_len"]}
-        want_stats = self._n_attn_layers and self.track_stats
-        if want_stats:
-            fetch["in_rest"] = tstats["in_rest"]
-            fetch["accesses"] = tstats["accesses"]
-        host = jax.device_get(fetch)
-        self._ctx_host[:] = host["ctx"]
-
-        # ---- feed translation telemetry back (PTW-cost tracking) --------
-        if want_stats:
-            nblk = self.spec.max_blocks_per_seq
-            live_mask = np.zeros(self.max_batch, bool)
-            live_mask[[self._slot_of[r.seq_id] for r in live]] = True
-            n_alloc = (self._ctx_host + bs - 1) // bs    # post-step blocks
-            valid = (live_mask[:, None]
-                     & (np.arange(nblk)[None, :] < n_alloc[:, None]))
-            vpns = (np.arange(self.max_batch)[:, None] * nblk
-                    + np.arange(nblk)[None, :])
-            m.record_device_stats(vpns[valid],
-                                  host["in_rest"][0][valid],
-                                  host["accesses"][0][valid])
-            m.run_promotions()
+        if live:
+            # allocate current blocks at boundaries; gather last tokens —
+            # all from host state, no device reads
+            tokens = np.zeros(self.max_batch, np.int64)
+            active = np.zeros(self.max_batch, bool)
+            for r in live:
+                slot = self._slot_of[r.seq_id]
+                active[slot] = True
+                pos = int(self._ctx_host[slot])
+                if self._n_attn_layers and pos % bs == 0:
+                    info = m.allocate_block(r.seq_id, pos // bs)
+                    if info.seg == SWAP:
+                        info = m.swap_in(r.seq_id, pos // bs)
+                tokens[slot] = r.generated[-1]
             self._apply_copies()
+            self._sync_translation()
+            # pre-step context snapshot: the telemetry mask below must
+            # count the blocks that existed when the step TRANSLATED, and
+            # the boundary block only if its allocation actually mapped
+            ctx_pre = self._ctx_host.copy()
 
-        out = {}
-        for r in live:
-            slot = self._slot_of[r.seq_id]
-            nxt = int(host["next"][slot])
-            r.generated.append(nxt)
+            logits, self.dstate, tstats = self._serve_step(
+                self.params, self.dstate, jnp.asarray(tokens),
+                jnp.asarray(active))
+
+            fetch["next"] = tstats["next_token"]
+            fetch["ctx"] = self.dstate["ctx_len"]
+            want_stats = self._n_attn_layers and self.track_stats
+            if want_stats:
+                fetch["in_rest"] = tstats["in_rest"]
+                fetch["accesses"] = tstats["accesses"]
+                fetch["mapped"] = tstats["mapped"]
+
+        if not fetch:
+            return {}
+        # ---- the step's ONE device->host fetch --------------------------
+        host = jax.device_get(fetch)
+
+        out: Dict[int, int] = {}
+        if live:
+            self._ctx_host[:] = host["ctx"]
+            # ---- feed translation telemetry back (PTW-cost tracking) ----
+            if want_stats:
+                nblk = self.spec.max_blocks_per_seq
+                live_mask = np.zeros(self.max_batch, bool)
+                live_mask[[self._slot_of[r.seq_id] for r in live]] = True
+                # pre-step block counts: blocks covering positions
+                # [0, pos] — NOT the post-step ctx, whose boundary block
+                # may not exist yet — further masked by the device
+                # ``mapped`` flag so a failed (swapped) allocation is not
+                # recorded as a flexible walk and fed to the promoter
+                n_pre = np.minimum(ctx_pre // bs + 1, nblk)
+                valid = (live_mask[:, None]
+                         & (np.arange(nblk)[None, :] < n_pre[:, None])
+                         & np.asarray(host["mapped"][0], bool))
+                vpns = (np.arange(self.max_batch)[:, None] * nblk
+                        + np.arange(nblk)[None, :])
+                m.record_device_stats(vpns[valid],
+                                      host["in_rest"][0][valid],
+                                      host["accesses"][0][valid])
+                m.run_promotions()
+                self._apply_copies()
+            for r in live:
+                slot = self._slot_of[r.seq_id]
+                nxt = int(host["next"][slot])
+                r.generated.append(nxt)
+                out[r.seq_id] = nxt
+                self._maybe_finish(r, nxt)
+        for r, _ in pending:
+            nxt = int(host[f"p{r.seq_id}"])
+            self._complete_prefill(r, nxt)
             out[r.seq_id] = nxt
-            if len(r.generated) >= r.max_new_tokens:
-                r.done = True
         return out
 
     def release(self, seq_id: int) -> None:
@@ -303,7 +463,10 @@ class Engine:
         slot = self._slot_of.pop(seq_id)
         self.dstate["ctx_len"] = self.dstate["ctx_len"].at[slot].set(0)
         self._ctx_host[slot] = 0
-        self.requests.pop(seq_id, None)
+        req = self.requests.pop(seq_id, None)
+        if req is not None:
+            self.finished[seq_id] = req
+        self._prefilling.pop(seq_id, None)
         self._sync_translation()
 
     def stats(self) -> dict:

@@ -1,12 +1,36 @@
-"""SPMD prefill step: forward + install caches into the hybrid KV pool.
+"""SPMD prefill step: multi-sequence forward + install caches into the
+hybrid KV pool.
 
-The prompt's K/V are computed by the training-style forward (chunked flash
-attention), then scattered into the pool slots the manager translated
-(``slots`` input, produced host-side by fault-based allocation).  The
-scatter runs inside shard_map so every write is local to the (data-group,
-token-shard) that owns the slot — the cache is resharded once
+One dispatch admits a whole *bucket* of sequences: the prompts' K/V are
+computed by the training-style forward (chunked flash attention), then
+scattered into the pool slots the manager translated (``slots`` input,
+produced host-side by fault-based allocation) for ALL sequences at once.
+The scatter runs inside shard_map so every write is local to the
+(data-group, token-shard) that owns the slot — the cache is resharded once
 (nblk-split -> block-token-split all-to-all) which the roofline's
 collective term accounts for.
+
+Calling convention (the admission scheduler's contract):
+
+* ``batch["tokens"]`` (B, S) — right-padded prompt prefixes.  Causal
+  attention makes right padding safe: position t never attends beyond t,
+  so every real position's activations are exact regardless of the pad
+  tail.  For a *chunked* admission the row holds the full prefix up to
+  the chunk end (the forward recomputes earlier chunks; only the new
+  blocks are installed — their recomputed K/V are bit-identical).
+* ``slots`` (B, nblk) int32 — pool slot per cache block to install;
+  ``-1`` blocks are DROPPED (pad blocks, blocks a previous chunk already
+  installed, prefix-shared blocks).
+* ``slot_ids`` (B,) int32 — the batch slot each row belongs to; ``-1``
+  rows (bucket padding) write nothing at all.
+* ``ctx`` (B,) int32 — the post-install context length per row.
+* ``last_pos`` (B,) int32 — index of the final real token in the logits
+  sequence dim (per-row: rows are padded to the bucket length).
+
+``ctx_len`` is scattered to PARTICIPATING slots only.  The pre-fix code
+did ``jnp.full_like(dstate["ctx_len"], ctx)`` — stomping the context
+length of every live sequence in the batch, which is what broke
+continuous batching (ISSUE 2's headline bug).
 """
 from __future__ import annotations
 
@@ -52,17 +76,24 @@ def _scatter_pool(pool, cache, slots, mesh: Mesh, spec: DecodeSpec):
 def make_prefill_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                       mesh: Optional[Mesh] = None, pins=no_pins,
                       fwd: FwdOptions = FwdOptions()):
-    """Returns prefill_step(params, dstate, batch, slots) ->
-    (last_logits (B, V), new dstate)."""
+    """Returns prefill_step(params, dstate, batch, slots, slot_ids, ctx,
+    last_pos) -> (last_logits (B, V), new dstate, stats).
+
+    ``stats["next_token"]`` is the greedy first generated token per row,
+    computed in-graph so the engine can fold it into its single per-step
+    device fetch.
+    """
     fwd_collect = FwdOptions(**{**fwd.__dict__, "collect_cache": True})
 
-    def prefill_step(params, dstate, batch, slots):
+    def prefill_step(params, dstate, batch, slots, slot_ids, ctx, last_pos):
         logits, aux, caches = forward(params, batch, cfg, dims, fwd_collect,
                                       pins)
         new_state = dict(dstate)
-        S = batch["tokens"].shape[1]
         B = batch["tokens"].shape[0]
-        ctx = S + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+        row_ok = slot_ids >= 0
+        n_slots = dstate["ctx_len"].shape[0]
+        # padding rows scatter out of bounds and are dropped
+        sid = jnp.where(row_ok, slot_ids, n_slots).astype(jnp.int32)
 
         if caches.get("k") is not None and "k_pool" in dstate:
             k, v = caches["k"], caches["v"]          # (L_attn, B, S_tot, KV, hd)
@@ -71,37 +102,52 @@ def make_prefill_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
             nblk = S_tot // bs
             k = k.reshape(L, B, nblk, bs, KV, hd)
             v = v.reshape(L, B, nblk, bs, KV, hd)
+            eff_slots = jnp.where(row_ok[:, None], slots, -1)
             if mesh is not None:
                 con = NamedSharding(mesh, P(None, spec.data_axes, None,
                                             spec.model_axis, None, None))
                 k = jax.lax.with_sharding_constraint(k, con)
                 v = jax.lax.with_sharding_constraint(v, con)
                 new_state["k_pool"] = _scatter_pool(
-                    dstate["k_pool"], k, slots, mesh, spec)
+                    dstate["k_pool"], k, eff_slots, mesh, spec)
                 new_state["v_pool"] = _scatter_pool(
-                    dstate["v_pool"], v, slots, mesh, spec)
+                    dstate["v_pool"], v, eff_slots, mesh, spec)
             else:
-                idx = jnp.maximum(slots.reshape(-1), 0)
+                sl = eff_slots.reshape(-1)
+                # -1 -> out-of-bounds, dropped (clamping to 0 would
+                # clobber whichever live sequence owns pool slot 0)
+                idx = jnp.where(sl >= 0, sl, dstate["k_pool"].shape[1])
                 new_state["k_pool"] = dstate["k_pool"].at[:, idx].set(
                     k.reshape(L, B * nblk, bs, KV, hd
-                              ).astype(dstate["k_pool"].dtype))
+                              ).astype(dstate["k_pool"].dtype), mode="drop")
                 new_state["v_pool"] = dstate["v_pool"].at[:, idx].set(
                     v.reshape(L, B * nblk, bs, KV, hd
-                              ).astype(dstate["v_pool"].dtype))
+                              ).astype(dstate["v_pool"].dtype), mode="drop")
 
         if "ssm" in dstate and caches.get("ssm") is not None:
             mc = caches["ssm"]
             state = mc.state if hasattr(mc, "state") else mc
             conv = mc.conv if hasattr(mc, "conv") else None
-            new_state["ssm"] = state.reshape(dstate["ssm"].shape)
-            new_state["conv"] = conv.reshape(dstate["conv"].shape).astype(
-                dstate["conv"].dtype)
+            st = state.reshape((-1, B) + dstate["ssm"].shape[2:])
+            cv = conv.reshape((-1, B) + dstate["conv"].shape[2:])
+            new_state["ssm"] = dstate["ssm"].at[:, sid].set(
+                st, mode="drop")
+            new_state["conv"] = dstate["conv"].at[:, sid].set(
+                cv.astype(dstate["conv"].dtype), mode="drop")
         if cfg.is_encoder_decoder and "cross_k" in dstate:
-            new_state["cross_k"] = caches["ck"].astype(
-                dstate["cross_k"].dtype)
-            new_state["cross_v"] = caches["cv"].astype(
-                dstate["cross_v"].dtype)
-        new_state["ctx_len"] = jnp.full_like(dstate["ctx_len"], ctx)
-        return logits[:, -1], new_state
+            new_state["cross_k"] = dstate["cross_k"].at[:, sid].set(
+                caches["ck"].astype(dstate["cross_k"].dtype), mode="drop")
+            new_state["cross_v"] = dstate["cross_v"].at[:, sid].set(
+                caches["cv"].astype(dstate["cross_v"].dtype), mode="drop")
+
+        # THE bugfix: scatter ctx_len to participating slots only — never
+        # touch the other sequences' context lengths
+        new_state["ctx_len"] = dstate["ctx_len"].at[sid].set(
+            ctx.astype(dstate["ctx_len"].dtype), mode="drop")
+
+        last = jnp.take_along_axis(
+            logits, last_pos[:, None, None].astype(jnp.int32), axis=1)[:, 0]
+        stats = {"next_token": jnp.argmax(last, axis=-1).astype(jnp.int32)}
+        return last, new_state, stats
 
     return prefill_step

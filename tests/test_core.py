@@ -179,6 +179,66 @@ class TestManager:
         assert info.seg != SWAP
         assert m.stats["swap_in"] == 1
 
+    def test_swap_in_does_not_count_a_fresh_fault(self):
+        """Fig. 9 accounting: bringing a swapped block back is a swap_in,
+        not a new page fault (the re-entered allocate_block previously
+        double-counted)."""
+        m = make_manager(total_slots=8, restseg_fraction=1.0, assoc=2,
+                         max_seqs=4, max_blocks_per_seq=32,
+                         mode="restrictive_only")
+        m.register_sequence(0)
+        for b in range(16):
+            m.allocate_block(0, b)
+        faults_before = m.stats["faults"]
+        b = next(vpn for vpn, i in m.blocks.items() if i.seg == SWAP) % 32
+        m.swap_in(0, b)
+        assert m.stats["swap_in"] == 1
+        assert m.stats["faults"] == faults_before
+
+    def test_third_sharer_updates_all_refcounts(self):
+        """A third sequence joining a shared slot must refresh refcount on
+        EVERY sharer's BlockInfo, not just the src (stale-refcount bug)."""
+        m = make_manager()
+        for s in (0, 1, 2):
+            m.register_sequence(s)
+        for b in range(4):
+            m.allocate_block(0, b)
+        m.share_prefix(0, 1, 2)
+        m.share_prefix(0, 2, 2)
+        for b in range(2):
+            infos = [m.blocks[m.cfg.vpn(m.seq_slot(s), b)] for s in range(3)]
+            assert [i.refcount for i in infos] == [3, 3, 3]
+            assert all(i.slot == infos[0].slot for i in infos)
+        m.check_invariants()
+        # releases propagate the decrement to the survivors too
+        m.free_sequence(1)
+        for b in range(2):
+            assert m.blocks[m.cfg.vpn(m.seq_slot(0), b)].refcount == 2
+            assert m.blocks[m.cfg.vpn(m.seq_slot(2), b)].refcount == 2
+        m.check_invariants()
+        m.free_sequence(0)
+        m.free_sequence(2)
+        m.check_invariants()
+
+    def test_promotion_clears_stale_flex_refcount(self):
+        """A flex->rest promotion frees the flex slot; its refcount entry
+        must go with it (caught by the slot_refcount/occupancy
+        cross-check in check_invariants)."""
+        m = make_manager(total_slots=64, restseg_fraction=0.125, assoc=2,
+                         max_seqs=4, max_blocks_per_seq=16,
+                         alloc_evicts=False)
+        m.register_sequence(0)
+        infos = [m.allocate_block(0, b) for b in range(16)]
+        vpn = next(i.vpn for i in infos if i.seg == FLEX)
+        old_slot = m.blocks[vpn].slot
+        for _ in range(6):
+            m.record_device_stats(np.array([vpn]), np.array([False]),
+                                  np.array([4]))
+        assert m.run_promotions() >= 1
+        assert m.blocks[vpn].seg == REST
+        assert old_slot not in m.slot_refcount
+        m.check_invariants()
+
 
 class TestBaselines:
     def test_radix_walk(self):

@@ -58,6 +58,40 @@ class TestRSWKernel:
         for a, b in zip(got, want):
             npt.assert_array_equal(np.asarray(a), np.asarray(b))
 
+    def test_large_vpn_tags_exact(self):
+        """Tags (vpn+1) at and above 2^24 must match exactly.
+
+        A float32 one-hot matmul rounds odd tags ≥ 2^24 to the nearest
+        even value, so vpn=2^24 (tag 2^24+1) silently missed — and worse,
+        a query for a *different* vpn whose tag rounds onto an installed
+        one falsely hit.  The kernel now recombines 16-bit tag halves in
+        int32; this pins both directions against the oracle.
+        """
+        n_sets, assoc = 4, 4
+        tar = np.zeros((n_sets, assoc), np.int32)
+        big = [(1 << 24), (1 << 24) + 6, (1 << 25) + 3, (1 << 26) + 9]
+        for v in big:
+            s = v % n_sets
+            way = int(np.nonzero(tar[s] == 0)[0][0])
+            tar[s, way] = v + 1                       # odd tags ≥ 2^24
+        sf = (tar != 0).sum(axis=1).astype(np.int32)
+        flex = -np.ones(16, np.int32)
+        # installed vpns, near-miss neighbours (tags that round onto the
+        # installed ones in f32), and small controls
+        queries = big + [v + 1 for v in big] + [v - 1 for v in big] + [0, 7]
+        vpns = jnp.asarray(queries, jnp.int32)
+        got = utopia_rsw(vpns, jnp.asarray(tar), jnp.asarray(sf),
+                         jnp.asarray(flex))
+        want = rsw_ref(vpns, jnp.asarray(tar), jnp.asarray(sf),
+                       jnp.asarray(flex))
+        for a, b in zip(got, want):
+            npt.assert_array_equal(np.asarray(a), np.asarray(b))
+        # installed vpns hit the RestSeg; their neighbours must not
+        n = len(big)
+        assert np.asarray(got[1][:n]).all(), "installed vpns must RSW-hit"
+        assert not np.asarray(got[1][n:3 * n]).any(), \
+            "rounded-tag neighbours must miss"
+
     def test_host_agreement(self):
         m = _populated_manager()
         ts = m.device_state()
