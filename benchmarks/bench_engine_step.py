@@ -123,7 +123,7 @@ class LegacyEngine(Engine):
             r.generated.append(nxt)
             out[r.seq_id] = nxt
             if len(r.generated) >= r.max_new_tokens:
-                r.done = True
+                self._states[r.seq_id].done = True
         self._ctx_host[:] = np.asarray(self.dstate["ctx_len"])
         return out
 

@@ -1,13 +1,15 @@
-"""End-to-end driver: serve a stream of requests through the admission
-scheduler.
+"""End-to-end driver: the request-centric serving API.
 
-Continuous batching over the Utopia hybrid-translated KV pool: more
-requests than batch slots are submitted up front, the engine admits them
-under a per-step prefill token budget (a long prompt is CHUNKED across
-steps so it interleaves with decode instead of stalling it), finished
-sequences auto-release so their slots recycle, prefix sharing links
-related prompts (FlexSeg refcounts), and the manager's translation
-statistics print at the end (the serving analogue of the paper's §8
+Continuous batching over the Utopia hybrid-translated KV pool, driven
+through the redesigned API: immutable ``Request`` submissions carry
+``SamplingParams`` (greedy and sampled requests share one batch), a
+pluggable Scheduler orders admission under a per-step prefill token
+budget (a long prompt is CHUNKED across steps so it interleaves with
+decode instead of stalling it), finished sequences auto-release so
+their slots recycle, prefix sharing links related prompts (FlexSeg
+refcounts), and generation is consumed as a stream of ``RequestOutput``
+snapshots.  Translation statistics print at the end, both global and
+attributed per request (the serving analogue of the paper's §8
 analysis).
 
 Run:  PYTHONPATH=src python examples/serve_engine.py
@@ -19,7 +21,7 @@ import numpy as np
 
 from repro.configs import ARCHS, reduced
 from repro.models import model_dims, init_params
-from repro.serve import Engine, Request
+from repro.serve import Engine, EngineConfig, Request, SamplingParams
 
 
 def main() -> None:
@@ -29,39 +31,48 @@ def main() -> None:
     bs = cfg.kv_block_size
     # budget = 2 blocks/step: the 6-block prompt below takes 3 admission
     # steps, decoding the already-live sequences in between
-    eng = Engine(cfg, params, max_batch=3, max_seq_len=10 * bs,
-                 prefill_budget=2 * bs, auto_release=True)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_seq_len=10 * bs, prefill_budget=2 * bs,
+        auto_release=True, scheduler="fifo"))
     rng = np.random.RandomState(0)
 
     system_prompt = rng.randint(0, cfg.vocab_size, 2 * bs)
     eng.add_request(Request(seq_id=0, prompt=system_prompt,
                             max_new_tokens=10))
-    # second request shares the system-prompt prefix (FlexSeg refcounts)
+    # second request shares the system-prompt prefix (FlexSeg refcounts);
+    # both greedy, so seq 0 and seq 1 MUST print identical token streams
+    # — the quick correctness signal for this example
     eng.submit(Request(seq_id=1, prompt=system_prompt, max_new_tokens=10),
                share_prefix_from=0, shared_blocks=1)
     # long prompt: chunked over three steps under the 2-block budget
     eng.submit(Request(seq_id=2, prompt=rng.randint(0, cfg.vocab_size,
                                                     6 * bs),
                        max_new_tokens=6))
-    # more requests than batch slots: admitted as soon as a slot recycles
-    for sid in (3, 4):
-        eng.submit(Request(seq_id=sid,
-                           prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
-                           max_new_tokens=6))
+    # more requests than batch slots: admitted as soon as a slot recycles.
+    # seq 4 SAMPLES at temperature 0.8 — per-slot sampling state means
+    # the greedy requests sharing its batch are untouched
+    eng.submit(Request(seq_id=3,
+                       prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                       max_new_tokens=6))
+    eng.submit(Request(seq_id=4,
+                       prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                       max_new_tokens=6,
+                       sampling=SamplingParams(temperature=0.8, top_k=40,
+                                               seed=7)))
 
     t0 = time.time()
-    step = 0
-    while eng.waiting or any(not r.done for r in eng.requests.values()):
-        out = eng.step()
-        step += 1
+    results = {}
+    for out in eng.stream():
         queued = len(eng.waiting)
-        print(f"step {step:2d}: tokens={out} (queued={queued})")
+        tag = f" [{out.finish_reason}]" if out.finished else ""
+        print(f"step {eng.step_count:2d}: seq {out.seq_id} "
+              f"+{list(out.new_token_ids)}{tag} (queued={queued})")
+        results[out.seq_id] = out
     dt = time.time() - t0
 
-    print(f"\ngenerated in {dt:.2f}s over {step} steps:")
-    everyone = {**eng.finished, **eng.requests}
-    for sid, r in sorted(everyone.items()):
-        print(f"  seq {sid}: {r.generated}")
+    print(f"\ngenerated in {dt:.2f}s over {eng.step_count} steps:")
+    for sid, out in sorted(results.items()):
+        print(f"  seq {sid}: {list(out.token_ids)} ({out.finish_reason})")
     st = eng.stats()
     total = st.get("rsw_hits", 0) + st.get("flex_walks", 0)
     print(f"\ntranslation stats: rsw_hits={st.get('rsw_hits', 0)} "
@@ -70,6 +81,10 @@ def main() -> None:
           f"shared_blocks={st.get('shared_blocks', 0)} "
           f"migrations={st.get('migrations_rest_to_flex', 0) + st.get('migrations_flex_to_rest', 0)} "
           f"swaps={st.get('swap_out', 0)}")
+    for sid, row in sorted(st["per_request"].items()):
+        print(f"  seq {sid}: rsw_hits={row['rsw_hits']} "
+              f"flex_walks={row['flex_walks']} "
+              f"swap_faults={row['swap_faults']}")
     for sid in list(eng.requests):
         eng.release(sid)
     eng.manager.check_invariants()

@@ -2,13 +2,16 @@
 
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b \\
         --requests 8 --max-new 16 [--mode hybrid|flexible_only|restrictive_only] \\
-        [--prefill-budget 128]
+        [--prefill-budget 128] [--scheduler fifo|spf|priority] \\
+        [--temperature 0.8 --top-k 40 --top-p 0.95 --seed 0]
 
-Drives the admission scheduler: all requests are submitted up front, the
-engine admits them under the per-step prefill token budget (chunking
-prompts longer than the budget), finished sequences auto-release so their
-slots recycle, and the run prints throughput plus the translation
-statistics (RSW hit rate, migrations, swaps).
+Drives the request-centric engine API: requests are submitted up front
+with per-request SamplingParams, the configured Scheduler admits them
+under the per-step prefill token budget (chunking prompts longer than
+the budget), finished sequences auto-release so their slots recycle,
+and generation is consumed as a stream of RequestOutput snapshots.  The
+run prints throughput plus translation statistics — global (RSW hit
+rate, migrations, swaps) and attributed per request.
 """
 from __future__ import annotations
 
@@ -20,7 +23,7 @@ import numpy as np
 
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.models import model_dims, init_params
-from repro.serve import Engine, Request
+from repro.serve import Engine, EngineConfig, Request, SamplingParams
 
 
 def main() -> None:
@@ -35,6 +38,15 @@ def main() -> None:
                          "(default: 4 * block_size * max_batch)")
     ap.add_argument("--mode", default="hybrid",
                     choices=["hybrid", "flexible_only", "restrictive_only"])
+    ap.add_argument("--scheduler", default="fifo",
+                    choices=["fifo", "spf", "priority"])
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy (the fast path)")
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--top-p", type=float, default=1.0)
+    ap.add_argument("--seed", type=int, default=None,
+                    help="base sampling seed; request sid uses seed + sid "
+                         "(default: per-request seq_id)")
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
@@ -44,10 +56,19 @@ def main() -> None:
     params = init_params(jax.random.PRNGKey(0), cfg, dims)
     bs = cfg.kv_block_size
     S = args.prompt_blocks * bs
-    eng = Engine(cfg, params, max_batch=args.max_batch,
-                 max_seq_len=S + cfg.frontend_tokens + args.max_new + bs,
-                 mode=args.mode, prefill_budget=args.prefill_budget,
-                 auto_release=True)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=args.max_batch,
+        max_seq_len=S + cfg.frontend_tokens + args.max_new + bs,
+        mode=args.mode, prefill_budget=args.prefill_budget,
+        auto_release=True, scheduler=args.scheduler))
+    def sampling(sid):
+        # distinct per-request PRNG streams: one shared seed would make
+        # identical prompts produce identical "sampled" token streams
+        return SamplingParams(
+            temperature=args.temperature, top_k=args.top_k,
+            top_p=args.top_p,
+            seed=None if args.seed is None else args.seed + sid)
+
     rng = np.random.RandomState(0)
     t0 = time.time()
     for sid in range(args.requests):
@@ -55,24 +76,29 @@ def main() -> None:
                     .astype(np.float32) if cfg.frontend != "none" else None)
         eng.submit(Request(
             seq_id=sid, prompt=rng.randint(0, cfg.vocab_size, S),
-            frontend=frontend, max_new_tokens=args.max_new))
-    steps = 0
+            frontend=frontend, max_new_tokens=args.max_new,
+            sampling=sampling(sid), priority=sid % 3))
     tokens = 0
-    while eng.waiting or any(not r.done for r in eng.requests.values()):
-        out = eng.step()
-        steps += 1
-        tokens += len(out)
+    for out in eng.stream():
+        tokens += len(out.new_token_ids)
     dt = time.time() - t0
-    print(f"arch={cfg.name} mode={args.mode}: {args.requests} requests, "
-          f"{tokens} tokens in {dt:.2f}s "
+    steps = eng.step_count
+    print(f"arch={cfg.name} mode={args.mode} sched={args.scheduler}: "
+          f"{args.requests} requests, {tokens} tokens in {dt:.2f}s "
           f"({tokens / dt:.1f} tok/s, {steps} engine steps, "
-          f"budget={eng.prefill_budget} tok/step)")
+          f"budget={eng.prefill_budget} tok/step, "
+          f"temp={args.temperature})")
     st = eng.stats()
     total = st.get("rsw_hits", 0) + st.get("flex_walks", 0)
     print(f"translation: rsw_hit_rate="
           f"{st.get('rsw_hits', 0) / max(total, 1):.2%} "
           f"migrations={st.get('migrations_rest_to_flex', 0) + st.get('migrations_flex_to_rest', 0)} "
           f"swaps={st.get('swap_out', 0)}")
+    for sid, row in sorted(st["per_request"].items()):
+        seen = row["rsw_hits"] + row["flex_walks"]
+        print(f"  seq {sid}: rsw_hits={row['rsw_hits']}/{seen} "
+              f"flex_walks={row['flex_walks']} "
+              f"swap_faults={row['swap_faults']}")
 
 
 if __name__ == "__main__":

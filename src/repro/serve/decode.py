@@ -46,6 +46,7 @@ from repro.models.ssm import MambaCache, mamba_decode_step
 from repro.models.moe import moe_decode
 from repro.core.tar_sf import RestSegState, rsw
 from repro.kernels.paged_attention.ref import paged_attention_ref
+from .sampling import sample_tokens
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +123,12 @@ def abstract_decode_state(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
         st["cross_v"] = sd((cfg.num_layers, batch, cfg.frontend_tokens,
                             dims.n_kv, dims.head_dim), dtype)
     st["ctx_len"] = sd((batch,), jnp.int32)
+    # per-slot sampling state (serve/sampling.py): the engine scatters a
+    # request's SamplingParams here at admission; zeros = greedy argmax
+    st["samp_temp"] = sd((batch,), jnp.float32)
+    st["samp_topk"] = sd((batch,), jnp.int32)
+    st["samp_topp"] = sd((batch,), jnp.float32)
+    st["samp_key"] = sd((batch, 2), jnp.uint32)
     return st
 
 
@@ -148,6 +155,10 @@ def decode_state_shardings(state_shape, mesh: Mesh, spec: DecodeSpec):
         "cross_v": P(None, da if spec.mode == "batch" else None, None,
                      None, None),
         "ctx_len": P(),
+        "samp_temp": P(),
+        "samp_topk": P(),
+        "samp_topp": P(),
+        "samp_key": P(),
     }
 
     def guard(name, leaf):
@@ -441,7 +452,7 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
 
     n_attn = sum(cfg.attn_on_layer(l) for l in range(cfg.num_layers))
 
-    def serve_step(params, dstate, tokens, active=None):
+    def serve_step(params, dstate, tokens, active=None, *, sample=False):
         positions = dstate["ctx_len"]
         act = (jnp.ones_like(positions, jnp.bool_) if active is None
                else active.astype(jnp.bool_))
@@ -576,9 +587,24 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
             mask = jnp.arange(vpad) < dims.logical_vocab
             logits = jnp.where(mask, logits, jnp.asarray(-1e9, logits.dtype))
         logits = pins("dec_logits", logits)
-        # greedy sampling in-graph: the engine reads the token ids, not the
-        # (B, V) logits, so the per-step fetch stays O(B)
-        stats["next_token"] = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # per-slot sampling in-graph: the engine reads token ids, not the
+        # (B, V) logits, so the per-step fetch stays O(B).  Greedy rows
+        # (samp_temp == 0) take the exact argmax path; sampled rows fold
+        # the slot's PRNG key with the pre-step position, making a token
+        # a pure function of (seed, position) — independent of admission
+        # schedule or batch composition.  ``sample`` is trace-static
+        # (jit static_argnames): an all-greedy batch compiles an
+        # argmax-only executable with none of the sort/softmax/gumbel
+        # work on its hot path.  The default is False so callers that
+        # never pass it (dryrun cost cells, direct step tests) keep the
+        # pre-sampling argmax trace; the engine passes it explicitly
+        if sample:
+            stats["next_token"] = sample_tokens(
+                logits, dstate["samp_temp"], dstate["samp_topk"],
+                dstate["samp_topp"], dstate["samp_key"], positions)
+        else:
+            stats["next_token"] = jnp.argmax(logits, axis=-1
+                                             ).astype(jnp.int32)
         # only active slots advance: an idle slot's ctx_len must not drift
         # (pre-scheduler it advanced unconditionally, which is why the
         # stale-write bound in translate_step exists)

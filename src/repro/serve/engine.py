@@ -1,40 +1,54 @@
-"""Continuous-batching serving engine over the hybrid-translated KV pool.
+"""Request-centric continuous-batching engine over the hybrid KV pool.
 
-The engine is the "operating system" of the serving stack (paper §5.6):
+The engine is the "operating system" of the serving stack (paper §5.6),
+fronted by a request-centric API:
 
-* admission: a waiting queue plus a per-step *prefill token budget*
-  (DESIGN.md §admission-scheduler).  ``submit()`` enqueues; every
-  ``step()`` admits up to the budget, bucketing variable-length prompts
-  into padded power-of-two length buckets (bounded compile shapes, the
-  ``_pad_pow2`` trick applied to whole prompts) and installing ALL
-  admitted sequences' KV blocks with one batched prefill dispatch per
-  bucket.  Prompts longer than the budget are *chunked*: each step
-  installs the next budget's worth of blocks, so a long prompt
-  interleaves with decode instead of stalling it;
+* ``EngineConfig`` — immutable construction options (replaces the old
+  12-kwarg constructor pile; the legacy kwargs still work through a
+  deprecation shim that warns once);
+* ``Request`` — an immutable submission (prompt, ``SamplingParams``,
+  priority, eos/max_tokens).  All mutable per-request runtime state
+  (generated tokens, done flag, per-request translation telemetry)
+  lives in an engine-internal ``RequestState`` and is surfaced through
+  ``RequestOutput`` snapshots from ``Engine.poll()`` / ``stream()``;
+* admission — a pluggable :class:`~repro.serve.scheduler.Scheduler`
+  (FIFO / shortest-prompt-first / priority-with-aging) orders waiting
+  requests; the engine itself owns budgets, chunking, slot registration
+  and prefix sharing.  Every ``step()`` admits up to the per-step
+  prefill token budget, bucketing variable-length prompts into padded
+  power-of-two length buckets (bounded compile shapes) and installing
+  ALL admitted sequences' KV blocks with one batched prefill dispatch
+  per bucket.  Prompts longer than the budget are *chunked* so a long
+  prompt interleaves with decode instead of stalling it;
+* sampling — per-request temperature / top-k / top-p with per-slot PRNG
+  keys runs IN-GRAPH (serve/sampling.py): the engine scatters a
+  request's SamplingParams into per-slot device arrays at admission and
+  both jitted steps emit token ids, so the per-step fetch stays O(B)
+  token ids.  Greedy (temperature 0) is the fast path, bit-identical to
+  the pre-sampling engine;
 * steady state: every decode step (i) allocates the current block when a
   sequence crosses a block boundary, (ii) scatters the *dirty deltas* of
-  TAR/SF/flex to the device (only entries that changed since the last
-  step), (iii) runs the jitted serve_step — which translates once and
-  returns the translation telemetry as an auxiliary output, (iv) feeds
-  that telemetry back to the manager (PTW-cost tracking) with no extra
-  translation, (v) applies any pending slot-to-slot migrations as ONE
-  batched gather/scatter (the DMA page copies of Fig. 16);
-* termination: a sequence finishes on its ``max_new_tokens`` budget or on
-  its ``eos_token``; with ``auto_release=True`` the engine frees its
-  sequence slot and KV blocks immediately (results stay readable in
-  ``finished``), so slots recycle under sustained load;
+  TAR/SF/flex to the device, (iii) runs the jitted serve_step — which
+  translates once and returns translation telemetry as an auxiliary
+  output, (iv) feeds that telemetry back to the manager globally AND
+  attributed per request (``stats()["per_request"]``), (v) applies
+  pending slot migrations as ONE batched gather/scatter (Fig. 16);
+* termination: ``max_new_tokens`` ("length") or ``eos_token`` ("stop");
+  with ``auto_release=True`` the slot and KV blocks free immediately and
+  recycle under sustained load;
 * prefix sharing between requests with a common prompt prefix (FlexSeg
   refcounts — the paper's inter-process page sharing);
-* eviction/swap: pool exhaustion surfaces as swap events exactly as in the
-  restrictive-only experiment (Fig. 9).
+* eviction/swap: pool exhaustion surfaces as swap events exactly as in
+  the restrictive-only experiment (Fig. 9).
 
-Hot-path contract (DESIGN.md §translate-once): the steady-state ``step()``
-performs a BOUNDED number of host<->device transfers — at most three
-dirty-delta scatters, two pool copy dispatches, the step dispatch itself,
-and ONE device_get — independent of batch size, sequence count, or
-pending-copy count.  Admission steps add one prefill dispatch per length
-bucket, but the fetch stays single: prefill first-tokens ride in the same
-``device_get`` as the decode telemetry.
+Hot-path contract (DESIGN.md §translate-once): the steady-state
+``step()`` performs a BOUNDED number of host<->device transfers — at
+most three dirty-delta scatters, two pool copy dispatches, the step
+dispatch itself, and ONE device_get — independent of batch size,
+sequence count, or pending-copy count.  Admission steps add one prefill
+dispatch per length bucket plus the sampling-state scatters, but the
+fetch stays single: prefill first-tokens ride in the same ``device_get``
+as the decode telemetry.
 
 Single-host configuration (G = 1 data group); the SPMD prefill/decode
 steps in serve/prefill.py and serve/decode.py are the same code the
@@ -43,8 +57,9 @@ launcher shards across a pod.
 from __future__ import annotations
 
 import dataclasses
-from collections import defaultdict, deque
-from typing import Deque, Dict, List, Optional, Tuple
+import warnings
+from collections import defaultdict
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +70,8 @@ from repro.core import HybridConfig, HybridKVManager, PoolExhausted, SWAP
 from repro.models import FwdOptions, model_dims
 from .decode import DecodeSpec, make_serve_step, init_decode_state
 from .prefill import make_prefill_step
+from .sampling import GREEDY, SamplingParams, prng_key_data
+from .scheduler import Scheduler, make_scheduler
 
 
 def _pad_pow2(idx: np.ndarray, fill) -> np.ndarray:
@@ -71,65 +88,206 @@ def _next_pow2(n: int) -> int:
     return 1 << max(0, int(n - 1).bit_length())
 
 
-@dataclasses.dataclass
+# ------------------------------------------------------------- request API
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Engine construction options.
+
+    ``scheduler`` is a policy name (``"fifo"`` / ``"spf"`` /
+    ``"priority"``), a ready Scheduler instance, or a zero-arg factory.
+    ``prefill_budget`` is NEW prompt tokens admitted per step (None =
+    ``4 * block_size * max_batch``).
+    """
+    max_batch: int = 4
+    max_seq_len: int = 256
+    pool_headroom: float = 1.25
+    mode: str = "hybrid"
+    attn_impl: str = "dense"
+    dtype: Any = jnp.float32
+    restseg_fraction: float = 0.75
+    track_stats: bool = True
+    prefill_budget: Optional[int] = None
+    auto_release: bool = False
+    scheduler: Any = "fifo"
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
 class Request:
+    """Immutable request submission.
+
+    The prompt (and frontend) arrays are defensively copied and marked
+    read-only at construction.  Runtime state — generated tokens, the
+    done flag, finish reason, per-request telemetry — lives in the
+    engine's internal ``RequestState``; consume it via the
+    ``RequestOutput`` snapshots that ``Engine.poll()`` returns.  The
+    ``generated`` / ``done`` properties remain readable for pre-redesign
+    call sites: after submission they proxy the engine-held state.
+    """
     seq_id: int
     prompt: np.ndarray
     frontend: Optional[np.ndarray] = None
     max_new_tokens: int = 16
     eos_token: Optional[int] = None
+    sampling: SamplingParams = GREEDY
+    priority: int = 0
+
+    def __post_init__(self):
+        p = np.array(self.prompt, copy=True)
+        p.setflags(write=False)
+        object.__setattr__(self, "prompt", p)
+        if self.frontend is not None:
+            f = np.array(self.frontend, copy=True)
+            f.setflags(write=False)
+            object.__setattr__(self, "frontend", f)
+
+    # -- compatibility views over the engine-held state ------------------
+    @property
+    def generated(self) -> List[int]:
+        st = getattr(self, "_engine_state", None)
+        return st.generated if st is not None else []
+
+    @property
+    def done(self) -> bool:
+        st = getattr(self, "_engine_state", None)
+        return st.done if st is not None else False
+
+
+@dataclasses.dataclass
+class RequestState:
+    """Engine-internal mutable per-request state."""
+    request: Request
+    arrival: int                     # engine step at submission (aging)
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    finish_reason: Optional[str] = None     # "stop" | "length"
+    new_tokens: List[int] = dataclasses.field(default_factory=list)
+    finish_reported: bool = False
+    # per-request translation telemetry (stats()["per_request"])
+    rsw_hits: int = 0
+    flex_walks: int = 0
+    swap_faults: int = 0
 
+
+@dataclasses.dataclass(frozen=True)
+class RequestOutput:
+    """Streaming snapshot for one request, drained by ``Engine.poll()``.
+
+    ``new_token_ids`` — tokens produced since the previous poll;
+    ``token_ids`` — all tokens generated so far; ``finish_reason`` —
+    ``"stop"`` (eos) or ``"length"`` (max_new_tokens) once finished.
+    """
+    seq_id: int
+    new_token_ids: Tuple[int, ...]
+    token_ids: Tuple[int, ...]
+    finished: bool
+    finish_reason: Optional[str]
+
+
+_LEGACY_KWARGS_WARNED = False
+
+
+def _warn_legacy_kwargs(kwargs) -> None:
+    global _LEGACY_KWARGS_WARNED
+    if _LEGACY_KWARGS_WARNED:
+        return
+    _LEGACY_KWARGS_WARNED = True
+    warnings.warn(
+        f"Engine(cfg, params, {', '.join(sorted(kwargs))}=...) kwargs are "
+        "deprecated; pass Engine(cfg, params, EngineConfig(...)) instead",
+        DeprecationWarning, stacklevel=3)
+
+
+# ------------------------------------------------------------------ engine
 
 class Engine:
-    def __init__(self, cfg: ArchConfig, params, *, max_batch: int = 4,
-                 max_seq_len: int = 256, pool_headroom: float = 1.25,
-                 mode: str = "hybrid", attn_impl: str = "dense",
-                 dtype=jnp.float32, restseg_fraction: float = 0.75,
-                 track_stats: bool = True,
-                 prefill_budget: Optional[int] = None,
-                 auto_release: bool = False):
+    def __init__(self, cfg: ArchConfig, params,
+                 config: Optional[EngineConfig] = None, **legacy):
+        if legacy:
+            if config is not None:
+                raise TypeError("pass an EngineConfig OR legacy kwargs, "
+                                "not both")
+            known = {f.name for f in dataclasses.fields(EngineConfig)}
+            unknown = set(legacy) - known
+            if unknown:
+                raise TypeError(f"unknown Engine kwargs {sorted(unknown)}")
+            _warn_legacy_kwargs(legacy)
+            config = EngineConfig(**legacy)
+        elif config is None:
+            config = EngineConfig()
+        self.config = config
         self.cfg = cfg
         self.dims = model_dims(cfg, tp=1)
         self.params = params
         bs = cfg.kv_block_size
+        max_batch, max_seq_len = config.max_batch, config.max_seq_len
         max_blocks = max_seq_len // bs
         self.hybrid_cfg = HybridConfig(
             block_size=bs,
-            total_slots=max(16, int(max_batch * max_blocks * pool_headroom)
-                            // 8 * 8),
-            restseg_fraction=restseg_fraction, assoc=8,
-            max_seqs=max_batch, max_blocks_per_seq=max_blocks, mode=mode)
-        self.track_stats = track_stats
+            total_slots=max(16, int(max_batch * max_blocks
+                                    * config.pool_headroom) // 8 * 8),
+            restseg_fraction=config.restseg_fraction, assoc=8,
+            max_seqs=max_batch, max_blocks_per_seq=max_blocks,
+            mode=config.mode)
+        self.track_stats = config.track_stats
         self.manager = HybridKVManager(self.hybrid_cfg)
         self.spec = DecodeSpec(
             block_size=bs, max_blocks_per_seq=max_blocks,
             slots_per_group=self.hybrid_cfg.total_slots,
             n_sets=self.hybrid_cfg.num_sets, assoc=self.hybrid_cfg.assoc,
             mode="batch", hash_name=self.hybrid_cfg.hash_name)
+        dtype = config.dtype
         self.dstate = init_decode_state(cfg, self.dims, self.spec,
                                         max_batch, 1, dtype=dtype)
         self.max_batch = max_batch
         # tokens of NEW prompt admitted per step; chunk granularity is the
         # KV block, so the effective budget is floor(budget / bs) blocks
-        self.prefill_budget = (prefill_budget if prefill_budget is not None
+        self.prefill_budget = (config.prefill_budget
+                               if config.prefill_budget is not None
                                else 4 * bs * max_batch)
-        self.auto_release = auto_release
-        self.fwd = FwdOptions(attn_impl=attn_impl, dtype=dtype,
+        if self.prefill_budget < bs:
+            raise ValueError(
+                f"prefill_budget {self.prefill_budget} is smaller than "
+                f"the KV block size {bs}: no prompt chunk could ever be "
+                "admitted")
+        self.auto_release = config.auto_release
+        self.scheduler: Scheduler = make_scheduler(config.scheduler)
+        # a scheduler instance is MUTABLE state: sharing one between two
+        # engines (e.g. via a reused EngineConfig holding an instance)
+        # would let engine B admit — and decode with B's params — a
+        # request submitted to engine A
+        if getattr(self.scheduler, "_bound_engine", None) is not None:
+            raise ValueError(
+                "scheduler instance is already bound to another Engine; "
+                "pass a policy name or factory in EngineConfig instead")
+        try:
+            self.scheduler._bound_engine = self
+        except AttributeError:
+            pass                       # slotted/frozen scheduler: skip
+        self.fwd = FwdOptions(attn_impl=config.attn_impl, dtype=dtype,
                               collect_cache=True)
+        # ``sample`` is static: at most two cached executables (all-greedy
+        # / any-sampled); the all-greedy one is the pre-sampling argmax
+        # hot path, with no sort/softmax/gumbel in the trace
         self._serve_step = jax.jit(make_serve_step(
-            cfg, self.dims, self.spec, mesh=None, dtype=dtype))
+            cfg, self.dims, self.spec, mesh=None, dtype=dtype),
+            static_argnames=("sample",))
         # one jitted callable; XLA re-specializes per (bucket_B, bucket_S)
         # — both power-of-two padded, so the executable set is bounded
         self._prefill_step = jax.jit(make_prefill_step(
-            cfg, self.dims, self.spec, mesh=None, fwd=self.fwd))
-        self.requests: Dict[int, Request] = {}
+            cfg, self.dims, self.spec, mesh=None, fwd=self.fwd),
+            static_argnames=("sample",))
+        self.requests: Dict[int, Request] = {}      # registered, live
         self.finished: Dict[int, Request] = {}
-        self.waiting: Deque[Request] = deque()
+        self._states: Dict[int, RequestState] = {}
+        self._current: Optional[Request] = None     # mid-chunk prefill
         self._slot_of: Dict[int, int] = {}
         self._prefilling: Dict[int, int] = {}   # seq_id -> tokens installed
         self._share: Dict[int, Tuple[int, int]] = {}
+        self._pending_samp: List[Tuple[int, Request]] = []
+        self._step_count = 0                    # scheduler clock (aging)
+        # chunk trace for scheduler tests: (seq_id, start, end) per chunk
+        self.admission_log: List[Tuple[int, int, int]] = []
         self._n_attn_layers = sum(cfg.attn_on_layer(l)
                                   for l in range(cfg.num_layers))
         self._has_recurrent = cfg.family in ("ssm", "hybrid")
@@ -139,14 +297,32 @@ class Engine:
         self._synced_full = False
 
     # ------------------------------------------------------------ admission
+    @property
+    def waiting(self) -> Tuple[Request, ...]:
+        """Requests whose prompt is not fully installed yet: the
+        engine-owned mid-chunk request (if any) first, then the
+        scheduler's queue."""
+        head = (self._current,) if self._current is not None else ()
+        return head + tuple(self.scheduler.pending())
+
+    def has_unfinished(self) -> bool:
+        return bool(self.waiting) or any(
+            not self._states[sid].done for sid in self.requests)
+
     def submit(self, req: Request, share_prefix_from: Optional[int] = None,
                shared_blocks: int = 0) -> None:
-        """Enqueue a request; ``step()`` admits it under the token budget."""
+        """Enqueue a request; ``step()`` admits it under the token budget
+        in the order the configured scheduler decides.
+
+        A ``seq_id`` may be reused once its previous request FINISHED;
+        the engine then forgets the old incarnation entirely (its entry
+        in ``finished`` and its ``stats()["per_request"]`` row are
+        dropped).  Reusing a queued or live id raises."""
         bs = self.cfg.kv_block_size
         S = len(np.asarray(req.prompt))
         if S == 0:
             raise ValueError("empty prompt: an unadmittable request would "
-                             "stall the FIFO queue head forever")
+                             "stall the queue head forever")
         if S % bs:
             raise ValueError(f"prompt length {S} must be a multiple of the "
                              f"KV block size {bs} (pad upstream)")
@@ -154,9 +330,25 @@ class Engine:
         if front % bs:
             raise ValueError(f"frontend length {front} must be a multiple "
                              f"of the KV block size {bs}")
+        old = self._states.get(req.seq_id)
+        if old is not None and not old.done:
+            raise ValueError(f"seq_id {req.seq_id} is already queued or "
+                             "live")
+        if req.seq_id in self._slot_of:
+            # finished but never released (auto_release=False): its slot,
+            # ctx and KV blocks are still registered — re-admitting the
+            # id would inherit them
+            raise ValueError(
+                f"seq_id {req.seq_id} finished but still holds its "
+                f"sequence slot; call release({req.seq_id}) first or "
+                "construct the engine with auto_release=True")
+        self.finished.pop(req.seq_id, None)   # forget a finished reuse
         if share_prefix_from is not None and shared_blocks:
             self._share[req.seq_id] = (share_prefix_from, shared_blocks)
-        self.waiting.append(req)
+        state = RequestState(request=req, arrival=self._step_count)
+        object.__setattr__(req, "_engine_state", state)
+        self._states[req.seq_id] = state
+        self.scheduler.add(req, state.arrival)
 
     def add_request(self, req: Request,
                     share_prefix_from: Optional[int] = None,
@@ -182,21 +374,25 @@ class Engine:
     def _admit(self, budget: Optional[int]
                ) -> List[Tuple[Request, jnp.ndarray]]:
         """Admit waiting prompts up to ``budget`` NEW tokens (None =
-        unbounded), in FIFO order, chunked at KV-block granularity.
+        unbounded), in scheduler order, chunked at KV-block granularity.
 
         Returns [(request, in-graph first-token array)] for every request
         whose FINAL chunk was installed this call; the caller folds the
         arrays into its single device fetch.
         """
-        if not self.waiting:
+        if self._current is None and not len(self.scheduler):
             return []
         m = self.manager
         bs = self.cfg.kv_block_size
         if budget is None:
             budget = sum(len(np.asarray(r.prompt)) for r in self.waiting)
         chunks: List[Tuple[Request, int, int, bool]] = []
-        while self.waiting and budget >= bs:
-            req = self.waiting[0]
+        while budget >= bs:
+            req = self._current
+            if req is None:
+                req = self.scheduler.select(self._step_count)
+                if req is None:
+                    break
             if req.seq_id not in self._slot_of:
                 if not m._free_seq_slots:
                     break                      # wait for a release
@@ -204,6 +400,7 @@ class Engine:
                 self._slot_of[req.seq_id] = slot
                 self.requests[req.seq_id] = req
                 self._prefilling[req.seq_id] = 0
+                self._pending_samp.append((slot, req))
                 share = self._share.pop(req.seq_id, None)
                 # the source may have finished and auto-released while the
                 # sharer waited in the queue: sharing is an optimization,
@@ -219,15 +416,26 @@ class Engine:
             take = min(total - start, budget // bs * bs)
             if take <= 0:
                 break
+            if self._current is None:
+                # first chunk admitted: the engine owns the request until
+                # its final chunk installs (a policy can reorder queued
+                # requests, never interleave half-prefilled prompts)
+                self.scheduler.pop(req)
+                self._current = req
             end = start + take
             budget -= take
             self._prefilling[req.seq_id] = end
             final = end == total
             chunks.append((req, start, end, final))
+            self.admission_log.append((req.seq_id, start, end))
             if final:
-                self.waiting.popleft()
-            # a partial chunk leaves the request at the queue head with
-            # budget < bs, ending the loop: it continues next step
+                self._current = None
+            # a partial chunk stays engine-owned with budget < bs, ending
+            # the loop: it continues next step
+
+        # newly registered sequences' SamplingParams must be on device
+        # before any prefill dispatch samples its first token
+        self._install_sampling()
 
         # ---- bucket by padded prefix length; one dispatch per bucket ----
         # Right padding is exact ONLY under causal attention; a recurrent
@@ -245,6 +453,37 @@ class Engine:
         for s_pad, grp in sorted(buckets.items()):
             pending.extend(self._prefill_bucket(grp, s_pad, front))
         return pending
+
+    def _install_sampling(self) -> None:
+        """Scatter newly registered requests' SamplingParams into the
+        per-slot device arrays (4 pow2-padded scatters; admission path
+        only — the steady-state step never touches these)."""
+        if not self._pending_samp:
+            return
+        rows = np.asarray([s for s, _ in self._pending_samp], np.int32)
+        sp = [r.sampling for _, r in self._pending_samp]
+        keys = np.stack([prng_key_data(p, r.seq_id)
+                         for p, (_, r) in zip(sp, self._pending_samp)])
+        self._pending_samp.clear()
+        n = _next_pow2(rows.size)
+
+        def pad(a):
+            reps = n - a.shape[0]
+            if reps:
+                a = np.concatenate([a, np.repeat(a[:1], reps, axis=0)])
+            return a
+
+        # duplicate scatter index with duplicated value — benign
+        ji = jnp.asarray(pad(rows))
+        self.dstate["samp_temp"] = self.dstate["samp_temp"].at[ji].set(
+            jnp.asarray(pad(np.asarray([p.temperature for p in sp],
+                                       np.float32))))
+        self.dstate["samp_topk"] = self.dstate["samp_topk"].at[ji].set(
+            jnp.asarray(pad(np.asarray([p.top_k for p in sp], np.int32))))
+        self.dstate["samp_topp"] = self.dstate["samp_topp"].at[ji].set(
+            jnp.asarray(pad(np.asarray([p.top_p for p in sp], np.float32))))
+        self.dstate["samp_key"] = self.dstate["samp_key"].at[ji].set(
+            jnp.asarray(pad(keys.astype(np.uint32))))
 
     def _prefill_bucket(self, grp, s_pad: int, front: int):
         """Allocate blocks and run ONE batched prefill dispatch for a
@@ -290,9 +529,12 @@ class Engine:
         batch = {"tokens": jnp.asarray(tokens)}
         if frontend is not None:
             batch["frontend"] = jnp.asarray(frontend)
+        any_sampled = any(not req.sampling.is_greedy
+                          for req, _, _, _ in grp)
         _, self.dstate, pstats = self._prefill_step(
             self.params, self.dstate, batch, jnp.asarray(slots),
-            jnp.asarray(slot_ids), jnp.asarray(ctx), jnp.asarray(last_pos))
+            jnp.asarray(slot_ids), jnp.asarray(ctx), jnp.asarray(last_pos),
+            sample=any_sampled)
         out = []
         for i, (req, start, end, final) in enumerate(grp):
             self._ctx_host[slot_ids[i]] = int(ctx[i])
@@ -302,15 +544,19 @@ class Engine:
 
     def _complete_prefill(self, req: Request, nxt: int) -> None:
         self._prefilling.pop(req.seq_id, None)
-        req.generated.append(nxt)
-        self._maybe_finish(req, nxt)
+        st = self._states[req.seq_id]
+        st.generated.append(nxt)
+        st.new_tokens.append(nxt)
+        self._maybe_finish(st, nxt)
 
-    def _maybe_finish(self, req: Request, nxt: int) -> None:
-        if req.done:
+    def _maybe_finish(self, st: RequestState, nxt: int) -> None:
+        if st.done:
             return
+        req = st.request
         hit_eos = req.eos_token is not None and nxt == req.eos_token
-        if hit_eos or len(req.generated) >= req.max_new_tokens:
-            req.done = True
+        if hit_eos or len(st.generated) >= req.max_new_tokens:
+            st.done = True
+            st.finish_reason = "stop" if hit_eos else "length"
             if self.auto_release and req.seq_id in self._slot_of:
                 self.release(req.seq_id)
 
@@ -376,12 +622,14 @@ class Engine:
         """One engine step: admit under the prefill budget, then decode
         all live sequences.  Returns {seq_id: token} for every sequence
         that produced a token (prefill completions AND decodes)."""
+        self._step_count += 1
         fetch = {}
         pending = self._admit(self.prefill_budget)
         for r, tok in pending:
             fetch[f"p{r.seq_id}"] = tok
-        live = [r for r in self.requests.values()
-                if not r.done and r.seq_id not in self._prefilling]
+        live = [self._states[sid] for sid, r in self.requests.items()
+                if not self._states[sid].done
+                and sid not in self._prefilling]
         m = self.manager
         bs = self.cfg.kv_block_size
         if live:
@@ -389,15 +637,17 @@ class Engine:
             # all from host state, no device reads
             tokens = np.zeros(self.max_batch, np.int64)
             active = np.zeros(self.max_batch, bool)
-            for r in live:
-                slot = self._slot_of[r.seq_id]
+            for st in live:
+                sid = st.request.seq_id
+                slot = self._slot_of[sid]
                 active[slot] = True
                 pos = int(self._ctx_host[slot])
                 if self._n_attn_layers and pos % bs == 0:
-                    info = m.allocate_block(r.seq_id, pos // bs)
+                    info = m.allocate_block(sid, pos // bs)
                     if info.seg == SWAP:
-                        info = m.swap_in(r.seq_id, pos // bs)
-                tokens[slot] = r.generated[-1]
+                        info = m.swap_in(sid, pos // bs)
+                        st.swap_faults += 1
+                tokens[slot] = st.generated[-1]
             self._apply_copies()
             self._sync_translation()
             # pre-step context snapshot: the telemetry mask below must
@@ -405,9 +655,11 @@ class Engine:
             # the boundary block only if its allocation actually mapped
             ctx_pre = self._ctx_host.copy()
 
+            any_sampled = any(not st.request.sampling.is_greedy
+                              for st in live)
             logits, self.dstate, tstats = self._serve_step(
                 self.params, self.dstate, jnp.asarray(tokens),
-                jnp.asarray(active))
+                jnp.asarray(active), sample=any_sampled)
 
             fetch["next"] = tstats["next_token"]
             fetch["ctx"] = self.dstate["ctx_len"]
@@ -428,8 +680,10 @@ class Engine:
             # ---- feed translation telemetry back (PTW-cost tracking) ----
             if want_stats:
                 nblk = self.spec.max_blocks_per_seq
+                live_slots = [self._slot_of[st.request.seq_id]
+                              for st in live]
                 live_mask = np.zeros(self.max_batch, bool)
-                live_mask[[self._slot_of[r.seq_id] for r in live]] = True
+                live_mask[live_slots] = True
                 # pre-step block counts: blocks covering positions
                 # [0, pos] — NOT the post-step ctx, whose boundary block
                 # may not exist yet — further masked by the device
@@ -441,23 +695,81 @@ class Engine:
                          & np.asarray(host["mapped"][0], bool))
                 vpns = (np.arange(self.max_batch)[:, None] * nblk
                         + np.arange(nblk)[None, :])
-                m.record_device_stats(vpns[valid],
-                                      host["in_rest"][0][valid],
+                in_rest = np.asarray(host["in_rest"][0], bool)
+                m.record_device_stats(vpns[valid], in_rest[valid],
                                       host["accesses"][0][valid])
+                # the same telemetry, attributed per request: RestSeg
+                # hits vs flexible walks for each sequence's own blocks
+                hits_slot = (valid & in_rest).sum(axis=1)
+                walks_slot = (valid & ~in_rest).sum(axis=1)
+                for st, slot in zip(live, live_slots):
+                    st.rsw_hits += int(hits_slot[slot])
+                    st.flex_walks += int(walks_slot[slot])
                 m.run_promotions()
                 self._apply_copies()
-            for r in live:
-                slot = self._slot_of[r.seq_id]
-                nxt = int(host["next"][slot])
-                r.generated.append(nxt)
-                out[r.seq_id] = nxt
-                self._maybe_finish(r, nxt)
+            for st in live:
+                sid = st.request.seq_id
+                nxt = int(host["next"][self._slot_of[sid]])
+                st.generated.append(nxt)
+                st.new_tokens.append(nxt)
+                out[sid] = nxt
+                self._maybe_finish(st, nxt)
         for r, _ in pending:
             nxt = int(host[f"p{r.seq_id}"])
             self._complete_prefill(r, nxt)
             out[r.seq_id] = nxt
         return out
 
+    # ---------------------------------------------------- streaming output
+    @property
+    def step_count(self) -> int:
+        """Engine steps executed so far (the scheduler's aging clock)."""
+        return self._step_count
+
+    def poll(self) -> List[RequestOutput]:
+        """Advance the engine one step (if any work remains) and return a
+        ``RequestOutput`` per request that produced tokens or finished
+        since the previous poll.
+
+        Raises ``PoolExhausted`` when a step makes NO progress — no
+        token decoded, no prompt chunk admitted — while requests are
+        still queued: every slot is held by a finished-but-unreleased
+        sequence (``auto_release=False``), so iterating would spin
+        forever.  Release sequences or enable ``auto_release``."""
+        if self.has_unfinished():
+            before = (dict(self._prefilling), len(self.waiting))
+            out = self.step()
+            if (not out and self.waiting
+                    and before == (self._prefilling, len(self.waiting))):
+                raise PoolExhausted(
+                    f"{len(self.waiting)} queued request(s) cannot be "
+                    "admitted and nothing is decoding: release finished "
+                    "sequences or construct the engine with "
+                    "auto_release=True")
+        return self._drain_outputs()
+
+    def stream(self):
+        """Iterate ``RequestOutput`` snapshots until every submitted
+        request finishes."""
+        while self.has_unfinished():
+            yield from self.poll()
+        # outputs produced by direct step() calls before streaming began
+        yield from self._drain_outputs()
+
+    def _drain_outputs(self) -> List[RequestOutput]:
+        outs = []
+        for sid, st in self._states.items():
+            if st.new_tokens or (st.done and not st.finish_reported):
+                outs.append(RequestOutput(
+                    seq_id=sid, new_token_ids=tuple(st.new_tokens),
+                    token_ids=tuple(st.generated), finished=st.done,
+                    finish_reason=st.finish_reason))
+                st.new_tokens = []
+                if st.done:
+                    st.finish_reported = True
+        return outs
+
+    # ------------------------------------------------------------ teardown
     def release(self, seq_id: int) -> None:
         self.manager.free_sequence(seq_id)
         slot = self._slot_of.pop(seq_id)
@@ -466,8 +778,18 @@ class Engine:
         req = self.requests.pop(seq_id, None)
         if req is not None:
             self.finished[seq_id] = req
+        if self._current is not None and self._current.seq_id == seq_id:
+            self._current = None
         self._prefilling.pop(seq_id, None)
         self._sync_translation()
 
     def stats(self) -> dict:
-        return dict(self.manager.stats)
+        """Global manager counters plus ``"per_request"``: RestSeg hits /
+        flexible walks / swap faults attributed to each seq_id (decode
+        steps; live and finished requests both included)."""
+        s = dict(self.manager.stats)
+        s["per_request"] = {
+            sid: {"rsw_hits": st.rsw_hits, "flex_walks": st.flex_walks,
+                  "swap_faults": st.swap_faults}
+            for sid, st in self._states.items()}
+        return s

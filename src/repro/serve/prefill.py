@@ -46,6 +46,7 @@ from repro.models import FwdOptions, forward
 from repro.models.layers import no_pins
 from repro.models.transformer import ModelDims
 from .decode import DecodeSpec
+from .sampling import sample_tokens
 
 
 def _scatter_pool(pool, cache, slots, mesh: Mesh, spec: DecodeSpec):
@@ -85,7 +86,8 @@ def make_prefill_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
     """
     fwd_collect = FwdOptions(**{**fwd.__dict__, "collect_cache": True})
 
-    def prefill_step(params, dstate, batch, slots, slot_ids, ctx, last_pos):
+    def prefill_step(params, dstate, batch, slots, slot_ids, ctx, last_pos,
+                     *, sample=False):
         logits, aux, caches = forward(params, batch, cfg, dims, fwd_collect,
                                       pins)
         new_state = dict(dstate)
@@ -147,7 +149,26 @@ def make_prefill_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
 
         last = jnp.take_along_axis(
             logits, last_pos[:, None, None].astype(jnp.int32), axis=1)[:, 0]
-        stats = {"next_token": jnp.argmax(last, axis=-1).astype(jnp.int32)}
+        # first generated token, sampled in-graph with the row's per-slot
+        # SamplingParams (scattered by the engine BEFORE this dispatch).
+        # Fold position is ctx - 1: a token sampled from k context tokens
+        # folds k - 1, matching the decode step (pre-step ctx_len = k)
+        # so the stream is chunking- and schedule-independent.  Padding
+        # rows gather slot 0's params; their token is never read.
+        # ``sample`` is trace-static, default False: an all-greedy bucket
+        # (and the dryrun prefill cost cells, which never pass it) keeps
+        # the pre-sampling argmax-only trace; the engine passes True only
+        # when a request in the bucket samples.
+        if sample:
+            sid_safe = jnp.clip(sid, 0, n_slots - 1)
+            fold = jnp.maximum(ctx.astype(jnp.int32) - 1, 0)
+            stats = {"next_token": sample_tokens(
+                last, dstate["samp_temp"][sid_safe],
+                dstate["samp_topk"][sid_safe], dstate["samp_topp"][sid_safe],
+                dstate["samp_key"][sid_safe], fold)}
+        else:
+            stats = {"next_token": jnp.argmax(last, axis=-1
+                                              ).astype(jnp.int32)}
         return last, new_state, stats
 
     return prefill_step

@@ -1,0 +1,133 @@
+"""In-graph per-slot token sampling: SamplingParams -> next_token ids.
+
+The serving API attaches a :class:`SamplingParams` to every ``Request``;
+the engine scatters the per-request fields into per-batch-slot device
+arrays (``samp_temp`` / ``samp_topk`` / ``samp_topp`` / ``samp_key`` in
+the decode state) at admission, and BOTH jitted steps (``serve_step``,
+``prefill_step``) turn logits into token ids in-graph via
+:func:`sample_tokens`.  The engine keeps fetching token IDS, never
+``(B, V)`` logits — sampling does not touch the translate-once /
+single-device-fetch contract (DESIGN.md §translate-once, pinned by
+tests/test_sampling.py).
+
+Determinism: the per-slot PRNG key is derived once per request
+(``PRNGKey(seed)``, default seed = ``seq_id``) and every sampled
+position folds the key with its absolute context position, so the token
+sampled after ``k`` context tokens is a pure function of
+``(seed, logits)`` — independent of admission schedule, prompt
+chunking, batch slot, or what other requests share the batch
+(tests pin interleaved == sequential for sampled decode).
+
+Greedy (``temperature == 0``) rows take the exact ``argmax`` path the
+pre-sampling engine used — bit-identical tokens.
+
+Mask semantics (mirrored by the numpy oracle in tests): temperature
+scaling first, then top-k, then top-p over the RENORMALIZED top-k
+distribution (the vLLM ordering).  Both filters are thresholds on the
+scaled logits — a value tying the cut-off survives — and the top-1
+token always survives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# temperature floor for the scale divide on greedy rows (their sampled
+# branch is discarded by the final where, the clamp only avoids inf/nan)
+TEMP_EPS = 1e-6
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Immutable per-request sampling configuration.
+
+    temperature == 0 selects greedy argmax (the default, and the fast
+    path: bit-identical to the pre-sampling engine).  ``top_k <= 0``
+    disables the top-k filter; ``top_p = 1`` disables the nucleus
+    filter.  ``seed=None`` derives the request's PRNG stream from its
+    ``seq_id``.
+    """
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.temperature < 0:
+            raise ValueError(f"temperature must be >= 0, got "
+                             f"{self.temperature}")
+        if not 0 < self.top_p <= 1:
+            raise ValueError(f"top_p must be in (0, 1], got {self.top_p}")
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature == 0
+
+
+GREEDY = SamplingParams()
+
+
+def prng_key_data(params: SamplingParams, seq_id: int) -> np.ndarray:
+    """Host-side (2,) uint32 key data for a request's sampling stream."""
+    seed = params.seed if params.seed is not None else seq_id
+    return np.asarray(jax.random.PRNGKey(seed), np.uint32)
+
+
+def apply_top_k_top_p(logits: jax.Array, top_k: jax.Array,
+                      top_p: jax.Array) -> jax.Array:
+    """Mask ``logits (B, V)`` to the per-row top-k / top-p support.
+
+    ``top_k (B,) int32`` (<= 0 disables), ``top_p (B,) float32``.
+    Returns logits with excluded entries at ``-inf``.  Threshold
+    semantics: the cut-off is a VALUE, so ties with the k-th / nucleus
+    boundary logit are kept; the top-1 token always survives.
+    """
+    V = logits.shape[-1]
+    neg = -jnp.inf
+    desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    k = jnp.where(top_k > 0, jnp.clip(top_k, 1, V), V).astype(jnp.int32)
+    # top-p over the renormalized top-k'd distribution: the nucleus is
+    # the shortest descending prefix whose mass reaches top_p
+    desc_k = jnp.where(jnp.arange(V)[None, :] < k[:, None], desc, neg)
+    probs = jax.nn.softmax(desc_k, axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    # the rank < k clause re-asserts the top-k cut: the zero-probability
+    # tail has cum - probs == 1, which float rounding (cum ~ 0.9999999)
+    # would otherwise let past a top_p == 1.0 test
+    keep = ((cum - probs) < top_p[:, None]) \
+        & (jnp.arange(V)[None, :] < k[:, None])
+    last = jnp.maximum(jnp.sum(keep, axis=-1) - 1, 0)
+    thr = jnp.take_along_axis(desc_k, last[:, None], axis=-1)   # (B, 1)
+    return jnp.where(logits >= thr, logits, neg)
+
+
+def sample_tokens(logits: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, top_p: jax.Array, keys: jax.Array,
+                  steps: jax.Array) -> jax.Array:
+    """Per-slot next-token ids ``(B,) int32`` from ``logits (B, V)``.
+
+    ``keys (B, 2) uint32`` are the per-slot PRNG keys; ``steps (B,)``
+    the absolute context position each row samples at — the key is
+    folded with it, so a draw depends only on (key, position).  Rows
+    with ``temperature <= 0`` return the exact argmax (bit-identical to
+    the pre-sampling greedy path); everything is computed branch-free so
+    one trace serves mixed greedy/sampled batches.
+    """
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = (logits.astype(jnp.float32)
+              / jnp.maximum(temperature, TEMP_EPS)[:, None])
+    masked = apply_top_k_top_p(scaled, top_k, top_p)
+
+    def gumbel_row(key, step):
+        folded = jax.random.fold_in(key, step)
+        return jax.random.gumbel(folded, (logits.shape[-1],), jnp.float32)
+
+    # gumbel-max trick: argmax(logits + G) ~ Categorical(softmax(logits));
+    # -inf masked entries stay -inf and can never win
+    noise = jax.vmap(gumbel_row)(keys, steps)
+    sampled = jnp.argmax(masked + noise, axis=-1).astype(jnp.int32)
+    return jnp.where(temperature > 0, sampled, greedy)

@@ -1,0 +1,186 @@
+"""Pluggable admission schedulers: the Scheduler protocol + 3 policies.
+
+The engine's admission loop (``serve/engine.py::Engine._admit``) is
+policy-free: it asks its scheduler WHICH waiting request to prefill next
+and keeps budgets / chunking / slot registration / sharing to itself.  A
+scheduler orders only requests whose prefill has NOT started — once a
+request's first chunk is admitted the engine pops it and owns it as the
+in-progress chunk until the final chunk installs, so a policy can never
+interleave half-prefilled prompts.
+
+Shipped policies (``EngineConfig.scheduler`` takes the name, an
+instance, or a zero-arg factory):
+
+* ``fifo``     — submission order; bit-for-bit the PR-2 hard-coded deque
+  behaviour (pinned by tests/test_scheduler.py).
+* ``spf``      — shortest-prompt-first: under a tight prefill budget,
+  short prompts stop queueing behind long ones (ROADMAP item).
+* ``priority`` — highest ``Request.priority`` first with linear aging:
+  ``effective(now) = priority + aging_rate * (now - arrival)`` grows
+  without bound while a request waits, so a low-priority long prompt is
+  never starved by a stream of bounded-priority arrivals
+  (hypothesis property test in tests/test_scheduler.py).
+
+``now``/``arrival`` are in engine steps (the engine's step counter).
+All policies break ties by submission order, so equal-keyed requests
+drain FIFO.
+"""
+from __future__ import annotations
+
+from collections import deque
+from typing import Deque, List, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+
+@runtime_checkable
+class Scheduler(Protocol):
+    """Admission-ordering policy over not-yet-prefilling requests."""
+
+    def add(self, req, arrival: int) -> None:
+        """Enqueue a submitted request (``arrival`` = engine step)."""
+
+    def select(self, now: int) -> Optional[object]:
+        """Return the request to prefill next (without removing it), or
+        None when empty.  Must be stable: repeated calls with the same
+        queue and ``now`` return the same request."""
+
+    def pop(self, req) -> None:
+        """Remove ``req`` (the one ``select`` returned) from the queue."""
+
+    def pending(self) -> Tuple[object, ...]:
+        """Queued requests, best-first is NOT required (introspection)."""
+
+    def __len__(self) -> int:
+        ...
+
+
+class FIFOScheduler:
+    """Submission order — the PR-2 deque, bit-for-bit."""
+
+    def __init__(self) -> None:
+        self._q: Deque = deque()
+
+    def add(self, req, arrival: int) -> None:
+        self._q.append(req)
+
+    def select(self, now: int):
+        return self._q[0] if self._q else None
+
+    def pop(self, req) -> None:
+        assert self._q and self._q[0] is req, "pop != selected head"
+        self._q.popleft()
+
+    def pending(self) -> tuple:
+        return tuple(self._q)
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+
+class ShortestPromptFirst:
+    """Admit the shortest queued prompt first (ties: submission order).
+
+    Under a tight prefill budget a long prompt chunks across many steps;
+    admitting short prompts first bounds every short request's queueing
+    delay by one long-prompt CHUNK instead of the whole long prompt.
+    """
+
+    def __init__(self) -> None:
+        self._entries: List[Tuple[int, int, object]] = []
+        self._n = 0                                   # insertion counter
+
+    def add(self, req, arrival: int) -> None:
+        self._entries.append((int(np.asarray(req.prompt).size), self._n,
+                              req))
+        self._n += 1
+
+    def select(self, now: int):
+        if not self._entries:
+            return None
+        return min(self._entries)[2]
+
+    def pop(self, req) -> None:
+        for i, (_, _, r) in enumerate(self._entries):
+            if r is req:
+                del self._entries[i]
+                return
+        raise ValueError("request not queued")
+
+    def pending(self) -> tuple:
+        return tuple(r for _, _, r in self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+class PriorityAgingScheduler:
+    """Highest effective priority first, aging linearly while waiting.
+
+    ``effective(now) = priority + aging_rate * (now - arrival)``; ties go
+    to the earliest submission.  With ``aging_rate > 0`` and bounded
+    request priorities, every waiting request's effective priority
+    eventually exceeds any fresh arrival's, so nothing starves; with
+    ``aging_rate = 0`` this is strict priority scheduling.
+    """
+
+    def __init__(self, aging_rate: float = 0.25) -> None:
+        if aging_rate < 0:
+            raise ValueError("aging_rate must be >= 0")
+        self.aging_rate = aging_rate
+        self._entries: List[Tuple[object, int, int]] = []  # (req, arr, n)
+        self._n = 0
+
+    def add(self, req, arrival: int) -> None:
+        self._entries.append((req, int(arrival), self._n))
+        self._n += 1
+
+    def _effective(self, req, arrival: int, now: int) -> float:
+        return float(getattr(req, "priority", 0)
+                     + self.aging_rate * max(0, now - arrival))
+
+    def select(self, now: int):
+        best, best_key = None, None
+        for req, arrival, n in self._entries:
+            key = (self._effective(req, arrival, now), -n)
+            if best_key is None or key > best_key:
+                best, best_key = req, key
+        return best
+
+    def pop(self, req) -> None:
+        for i, (r, _, _) in enumerate(self._entries):
+            if r is req:
+                del self._entries[i]
+                return
+        raise ValueError("request not queued")
+
+    def pending(self) -> tuple:
+        return tuple(r for r, _, _ in self._entries)
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+
+SCHEDULERS = {
+    "fifo": FIFOScheduler,
+    "spf": ShortestPromptFirst,
+    "priority": PriorityAgingScheduler,
+}
+
+
+def make_scheduler(spec) -> Scheduler:
+    """Resolve ``EngineConfig.scheduler``: a policy name, a ready
+    Scheduler instance, or a zero-arg factory/class."""
+    if spec is None:
+        return FIFOScheduler()
+    if isinstance(spec, str):
+        try:
+            return SCHEDULERS[spec]()
+        except KeyError:
+            raise ValueError(f"unknown scheduler {spec!r}; known: "
+                             f"{sorted(SCHEDULERS)}") from None
+    if isinstance(spec, type) or not hasattr(spec, "select"):
+        if callable(spec):
+            return spec()
+        raise TypeError(f"cannot resolve scheduler from {spec!r}")
+    return spec

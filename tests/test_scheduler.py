@@ -1,0 +1,262 @@
+"""Scheduler tests (ISSUE 3): pluggable admission policies.
+
+* policy unit tests against the Scheduler protocol (no engine, no jit);
+* priority-with-aging non-starvation — deterministic bound check plus a
+  hypothesis property test over priorities / aging rates / queue depths;
+* engine-level: the FIFO scheduler reproduces the PR-2 hard-coded deque
+  admission bit-for-bit (chunk log compared against a reference
+  simulation of the old algorithm), and shortest-prompt-first /
+  priority policies reorder admission as specified.
+"""
+from collections import deque
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import model_dims, init_params
+from repro.serve import (Engine, EngineConfig, Request, SamplingParams,
+                         FIFOScheduler, ShortestPromptFirst,
+                         PriorityAgingScheduler, make_scheduler)
+
+
+def _req(sid, blocks=1, priority=0, bs=4):
+    return Request(seq_id=sid, prompt=np.zeros(blocks * bs, np.int64),
+                   priority=priority)
+
+
+# ------------------------------------------------------------- unit tests
+
+def test_fifo_is_submission_order():
+    s = FIFOScheduler()
+    reqs = [_req(i) for i in range(4)]
+    for r in reqs:
+        s.add(r, 0)
+    order = []
+    while len(s):
+        r = s.select(now=9)
+        s.pop(r)
+        order.append(r.seq_id)
+    assert order == [0, 1, 2, 3]
+
+
+def test_spf_orders_by_prompt_length_then_arrival():
+    s = ShortestPromptFirst()
+    for sid, blocks in ((0, 3), (1, 1), (2, 2), (3, 1)):
+        s.add(_req(sid, blocks), 0)
+    order = []
+    while len(s):
+        r = s.select(now=0)
+        s.pop(r)
+        order.append(r.seq_id)
+    assert order == [1, 3, 2, 0]          # 1-block ties drain FIFO
+
+
+def test_priority_zero_aging_is_strict_priority():
+    s = PriorityAgingScheduler(aging_rate=0.0)
+    for sid, pri in ((0, 1), (1, 5), (2, 5), (3, 0)):
+        s.add(_req(sid, priority=pri), 0)
+    order = []
+    for now in range(4):
+        r = s.select(now)
+        s.pop(r)
+        order.append(r.seq_id)
+    assert order == [1, 2, 0, 3]          # equal priorities drain FIFO
+
+
+def test_priority_aging_overtakes_fresh_arrivals():
+    """A low-priority request waiting long enough beats a fresher
+    high-priority one: effective = priority + rate * wait."""
+    s = PriorityAgingScheduler(aging_rate=1.0)
+    s.add(_req(0, priority=0), 0)
+    s.add(_req(1, priority=3), 5)
+    # at now=5: eff(0) = 5, eff(1) = 3 -> the aged request wins
+    assert s.select(now=5).seq_id == 0
+
+
+def test_make_scheduler_resolution():
+    assert isinstance(make_scheduler("fifo"), FIFOScheduler)
+    assert isinstance(make_scheduler("spf"), ShortestPromptFirst)
+    inst = PriorityAgingScheduler(aging_rate=0.5)
+    assert make_scheduler(inst) is inst
+    assert isinstance(make_scheduler(FIFOScheduler), FIFOScheduler)
+    with pytest.raises(ValueError, match="unknown scheduler"):
+        make_scheduler("lifo")
+
+
+# -------------------------------------------------------- non-starvation
+
+def _starvation_steps(low, high, rate, n_initial, max_steps):
+    """Simulate the adversarial stream: one high-priority arrival per
+    step, one admission per step (the tight-budget regime where each
+    step's budget covers exactly one queued prompt's first chunk).
+    Returns the step at which the low-priority victim is admitted, or
+    None if it starved past ``max_steps``."""
+    sched = PriorityAgingScheduler(aging_rate=rate)
+    victim = _req(10_000, blocks=8, priority=low)
+    sched.add(victim, 0)
+    for i in range(n_initial):
+        sched.add(_req(20_000 + i, priority=high), 0)
+    for now in range(1, max_steps + 1):
+        sched.add(_req(now, priority=high), now)
+        chosen = sched.select(now)
+        sched.pop(chosen)
+        if chosen is victim:
+            return now
+    return None
+
+
+def test_priority_aging_never_starves_deterministic():
+    admitted_at = _starvation_steps(low=0, high=8, rate=0.5,
+                                    n_initial=3, max_steps=40)
+    assert admitted_at is not None
+    # sanity: zero aging DOES starve under the same stream
+    assert _starvation_steps(low=0, high=8, rate=0.0, n_initial=3,
+                             max_steps=40) is None
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=50)
+    @given(low=st.integers(0, 3), high=st.integers(4, 10),
+           rate=st.floats(0.05, 2.0), n_initial=st.integers(0, 5))
+    def test_priority_aging_never_starves_property(low, high, rate,
+                                                   n_initial):
+        """effective = priority + rate*wait grows without bound, so the
+        victim must be admitted within (high-low)/rate + queue slack
+        steps whatever the priorities / rate / initial backlog."""
+        bound = int((high - low) / rate) + 2 * (n_initial + 1) + 10
+        assert _starvation_steps(low, high, rate, n_initial,
+                                 bound) is not None
+else:
+    def test_priority_aging_never_starves_property():
+        pytest.skip("hypothesis not installed")
+
+
+# ---------------------------------------------------------- engine level
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduced(ARCHS["granite-8b"])
+    dims = model_dims(cfg, tp=1)
+    params = init_params(jax.random.PRNGKey(0), cfg, dims)
+    return cfg, params
+
+
+def _drain(eng):
+    steps = 0
+    while eng.has_unfinished():
+        eng.step()
+        steps += 1
+        assert steps < 300, "engine failed to drain"
+    return steps
+
+
+def _pr2_admission_log(prompt_tokens, budget, bs):
+    """Reference simulation of the PR-2 hard-coded admission deque (the
+    exact loop the old Engine._admit ran, in the no-slot-contention
+    regime): FIFO head, chunked at block granularity, partial chunk
+    stays at the head."""
+    waiting = deque(prompt_tokens.items())
+    prefilling = {}
+    log = []
+    while waiting:
+        b = budget
+        while waiting and b >= bs:
+            sid, total = waiting[0]
+            start = prefilling.get(sid, 0)
+            take = min(total - start, b // bs * bs)
+            if take <= 0:
+                break
+            end = start + take
+            b -= take
+            prefilling[sid] = end
+            log.append((sid, start, end))
+            if end == total:
+                waiting.popleft()
+    return log
+
+
+def test_engine_fifo_matches_pr2_admission_bit_for_bit(setup):
+    """The default (FIFO) scheduler's chunk-by-chunk admission trace is
+    identical to the PR-2 deque algorithm: same chunks, same order, same
+    boundaries."""
+    cfg, params = setup
+    bs = cfg.kv_block_size
+    blocks = {0: 2, 1: 5, 2: 1, 3: 3}
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_seq_len=8 * bs, prefill_budget=2 * bs))
+    rng = np.random.RandomState(0)
+    for sid, nb in blocks.items():
+        eng.submit(Request(seq_id=sid,
+                           prompt=rng.randint(0, cfg.vocab_size, nb * bs),
+                           max_new_tokens=2))
+    _drain(eng)
+    want = _pr2_admission_log({s: nb * bs for s, nb in blocks.items()},
+                              budget=2 * bs, bs=bs)
+    assert eng.admission_log == want
+
+
+def test_engine_spf_admits_short_prompts_first(setup):
+    cfg, params = setup
+    bs = cfg.kv_block_size
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_seq_len=8 * bs, prefill_budget=bs,
+        scheduler="spf"))
+    rng = np.random.RandomState(1)
+    for sid, nb in ((0, 3), (1, 1), (2, 2), (3, 1)):
+        eng.submit(Request(seq_id=sid,
+                           prompt=rng.randint(0, cfg.vocab_size, nb * bs),
+                           max_new_tokens=2))
+    _drain(eng)
+    first_chunk_order = [sid for sid, start, _ in eng.admission_log
+                         if start == 0]
+    assert first_chunk_order == [1, 3, 2, 0]
+
+
+def test_engine_priority_scheduler_orders_admission(setup):
+    cfg, params = setup
+    bs = cfg.kv_block_size
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_seq_len=6 * bs, prefill_budget=bs,
+        scheduler=PriorityAgingScheduler(aging_rate=0.0)))
+    rng = np.random.RandomState(2)
+    for sid, pri in ((0, 0), (1, 5), (2, 1)):
+        eng.submit(Request(seq_id=sid,
+                           prompt=rng.randint(0, cfg.vocab_size, bs),
+                           max_new_tokens=2, priority=pri))
+    _drain(eng)
+    first_chunk_order = [sid for sid, start, _ in eng.admission_log
+                         if start == 0]
+    assert first_chunk_order == [1, 2, 0]
+
+
+def test_scheduler_choice_does_not_change_tokens(setup):
+    """Admission ORDER is policy; token CONTENT is not: the same request
+    set generates identical tokens under FIFO and SPF (greedy decode is
+    deterministic and schedule-independent)."""
+    cfg, params = setup
+    bs = cfg.kv_block_size
+    rng = np.random.RandomState(8)
+    prompts = {0: rng.randint(0, cfg.vocab_size, 3 * bs),
+               1: rng.randint(0, cfg.vocab_size, bs)}
+
+    def run(policy):
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=2, max_seq_len=6 * bs, prefill_budget=bs,
+            scheduler=policy))
+        reqs = [Request(seq_id=s, prompt=p, max_new_tokens=4)
+                for s, p in prompts.items()]
+        for r in reqs:
+            eng.submit(r)
+        _drain(eng)
+        return {r.seq_id: list(r.generated) for r in reqs}
+
+    assert run("fifo") == run("spf")
