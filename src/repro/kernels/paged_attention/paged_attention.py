@@ -1,12 +1,20 @@
-"""Pallas TPU kernel: decode-time paged attention over the hybrid KV pool.
+"""Pallas TPU kernel: paged attention over the hybrid KV pool.
 
-Seq-major decode (vLLM-layout analogue): one query token per sequence
-attends over its logical blocks; physical slots come from the Utopia hybrid
-translation (the RSW kernel's output), delivered via *scalar prefetch* so
-the BlockSpec ``index_map`` can steer the DMA of each grid step to the
-right pool slot — the TPU analogue of the paper's "translation resolved
-before the data access, overlapped with the previous tile's compute"
-(software pipelining replaces the paper's RSW ∥ L2-TLB parallelism).
+Seq-major (vLLM-layout analogue): each sequence's query tokens attend over
+its logical blocks; physical slots come from the Utopia hybrid translation
+(the RSW kernel's output), delivered via *scalar prefetch* so the BlockSpec
+``index_map`` can steer the DMA of each grid step to the right pool slot —
+the TPU analogue of the paper's "translation resolved before the data
+access, overlapped with the previous tile's compute" (software pipelining
+replaces the paper's RSW ∥ L2-TLB parallelism).
+
+Queries may be a single token per sequence (decode, ``q (B, H, D)``) or a
+whole prefill chunk (prefix-KV admission, ``q (B, Q, H, D)``): the Q chunk
+tokens ride in the same VMEM tile and share each pool block's DMA, so a
+chunk costs the same pool traffic as one decode token.  All Q queries of a
+row attend the same extent ``ctx_len[b]`` (the installed prefix); the
+chunk-internal causal part is computed outside and combined through the
+(m, l) outputs.
 
 Grid: (batch, num_blocks).  Scratch carries the online-softmax (m, l, acc)
 across the block dimension.  Outputs are the *unnormalized* weighted values
@@ -44,10 +52,10 @@ def _paged_attn_kernel(slots_ref, ctx_ref, q_ref, k_ref, v_ref,
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
 
-    q = q_ref[0].astype(jnp.float32)                    # (H, D)
+    q = q_ref[0].astype(jnp.float32)                    # (Q, H, D)
     k = k_ref[0].astype(jnp.float32)                    # (bs, KV, D)
     v = v_ref[0].astype(jnp.float32)
-    H, D = q.shape
+    Q, H, D = q.shape
     bs, KV, _ = k.shape
     g = H // KV
     scale = 1.0 / math.sqrt(D)
@@ -58,27 +66,27 @@ def _paged_attn_kernel(slots_ref, ctx_ref, q_ref, k_ref, v_ref,
     pos = j * block_tokens + tok_offset + jnp.arange(bs) * tok_stride
     valid = (pos < ctx) & (slot >= 0)                   # (bs,)
 
-    qk = q.reshape(KV, g, D)
-    s = jnp.einsum("kgd,tkd->kgt", qk, k) * scale       # (KV, g, bs)
-    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    qk = q.reshape(Q, KV, g, D)
+    s = jnp.einsum("qkgd,tkd->qkgt", qk, k) * scale     # (Q, KV, g, bs)
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
 
-    m_prev = m_scr[...]                                 # (KV, g)
+    m_prev = m_scr[...]                                 # (Q, KV, g)
     l_prev = l_scr[...]
     m_new = jnp.maximum(m_prev, s.max(axis=-1))
     p = jnp.exp(s - m_new[..., None])
-    p = jnp.where(valid[None, None, :], p, 0.0)
+    p = jnp.where(valid[None, None, None, :], p, 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_new = l_prev * corr + p.sum(axis=-1)
     acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
-        "kgt,tkd->kgd", p, v)
+        "qkgt,tkd->qkgd", p, v)
     m_scr[...] = m_new
     l_scr[...] = l_new
 
     @pl.when(j == n_blocks - 1)
     def _finish():
-        o_ref[0] = acc_ref[...].reshape(H, D).astype(o_ref.dtype)
-        m_ref[0] = m_scr[...].reshape(H).astype(m_ref.dtype)
-        l_ref[0] = l_scr[...].reshape(H).astype(l_ref.dtype)
+        o_ref[0] = acc_ref[...].reshape(Q, H, D).astype(o_ref.dtype)
+        m_ref[0] = m_scr[...].reshape(Q, H).astype(m_ref.dtype)
+        l_ref[0] = l_scr[...].reshape(Q, H).astype(l_ref.dtype)
 
 
 def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
@@ -86,14 +94,19 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            tok_offset: int = 0, tok_stride: int = 1,
                            block_tokens: int | None = None,
                            interpret: bool = True):
-    """q (B,H,D); k/v_pool (slots, bs_local, KV, D); slots (B, nblk) int32;
-    ctx_len (B,) int32.  Returns (o_weighted (B,H,D), m (B,H), l (B,H)).
+    """q (B,H,D) or (B,Q,H,D); k/v_pool (slots, bs_local, KV, D);
+    slots (B, nblk) int32; ctx_len (B,) int32.  Returns
+    (o_weighted (B[,Q],H,D), m (B[,Q],H), l (B[,Q],H)) — output rank
+    follows the query rank.
 
     ``tok_offset``/``tok_stride`` describe which global token positions the
     local pool token-shard holds (model-axis token striping); on a single
     shard use (0, 1) and ``block_tokens = bs_local``.
     """
-    B, H, D = q.shape
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, Q, H, D = q.shape
     n_slots, bs, KV, _ = k_pool.shape
     nblk = slots.shape[1]
     if block_tokens is None:
@@ -106,7 +119,7 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
         num_scalar_prefetch=2,                     # slots, ctx_len
         grid=(B, nblk),
         in_specs=[
-            pl.BlockSpec((1, H, D), lambda b, j, slots, ctx: (b, 0, 0)),
+            pl.BlockSpec((1, Q, H, D), lambda b, j, slots, ctx: (b, 0, 0, 0)),
             pl.BlockSpec((1, bs, KV, D),
                          lambda b, j, slots, ctx:
                          (jnp.maximum(slots[b, j], 0), 0, 0, 0)),
@@ -115,23 +128,26 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                          (jnp.maximum(slots[b, j], 0), 0, 0, 0)),
         ],
         out_specs=[
-            pl.BlockSpec((1, H, D), lambda b, j, slots, ctx: (b, 0, 0)),
-            pl.BlockSpec((1, H), lambda b, j, slots, ctx: (b, 0)),
-            pl.BlockSpec((1, H), lambda b, j, slots, ctx: (b, 0)),
+            pl.BlockSpec((1, Q, H, D), lambda b, j, slots, ctx: (b, 0, 0, 0)),
+            pl.BlockSpec((1, Q, H), lambda b, j, slots, ctx: (b, 0, 0)),
+            pl.BlockSpec((1, Q, H), lambda b, j, slots, ctx: (b, 0, 0)),
         ],
         scratch_shapes=[
-            pltpu.VMEM((KV, g, D), jnp.float32),
-            pltpu.VMEM((KV, g), jnp.float32),
-            pltpu.VMEM((KV, g), jnp.float32),
+            pltpu.VMEM((Q, KV, g, D), jnp.float32),
+            pltpu.VMEM((Q, KV, g), jnp.float32),
+            pltpu.VMEM((Q, KV, g), jnp.float32),
         ],
     )
-    return pl.pallas_call(
+    o, m, l = pl.pallas_call(
         kernel,
         grid_spec=grid_spec,
         out_shape=[
-            jax.ShapeDtypeStruct((B, H, D), jnp.float32),
-            jax.ShapeDtypeStruct((B, H), jnp.float32),
-            jax.ShapeDtypeStruct((B, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, Q, H, D), jnp.float32),
+            jax.ShapeDtypeStruct((B, Q, H), jnp.float32),
+            jax.ShapeDtypeStruct((B, Q, H), jnp.float32),
         ],
         interpret=interpret,
     )(slots, ctx_len, q, k_pool, v_pool)
+    if squeeze:
+        return o[:, 0], m[:, 0], l[:, 0]
+    return o, m, l

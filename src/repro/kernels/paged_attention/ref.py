@@ -1,4 +1,13 @@
-"""Pure-jnp oracle for decode paged attention over the hybrid pool."""
+"""Pure-jnp oracle for paged attention over the hybrid pool.
+
+Supports one query per sequence (decode, ``q (B, H, D)``) and multi-token
+queries (prefix-KV chunked prefill, ``q (B, Q, H, D)``): every query of a
+row attends the same pool extent ``ctx_len[b]`` — the installed prefix.
+Causal structure *within* a chunk is the caller's separate part (see
+``models.attention.causal_attention_parts``), merged through the
+unnormalized ``(o_weighted, m, l)`` contract this oracle shares with the
+Pallas kernel.
+"""
 from __future__ import annotations
 
 import math
@@ -9,11 +18,29 @@ import jax.numpy as jnp
 NEG_INF = -1e30
 
 
+def gather_pool_blocks(pool, slots):
+    """The translated-slot read path: ``pool (slots, bs, KV, D)`` gathered
+    at ``slots (B, nblk)`` (negative entries clamp to slot 0 and must be
+    masked by the caller) -> ``(B, nblk, bs, KV, D)``."""
+    return pool[jnp.maximum(slots, 0)]
+
+
 def paged_attention_ref(q, k_pool, v_pool, slots, ctx_len, *,
                         tok_offset: int = 0, tok_stride: int = 1,
                         block_tokens: int | None = None):
-    """Same contract as the kernel: returns (o_weighted, m, l)."""
-    B, H, D = q.shape
+    """Same contract as the kernel: returns (o_weighted, m, l).
+
+    ``q`` is (B, H, D) — decode, one token per sequence — or (B, Q, H, D)
+    — Q chunk tokens per sequence; outputs follow the query rank:
+    (B[, Q], H, D) / (B[, Q], H).  ``ctx_len`` (B,) bounds the attended
+    pool positions for every query of the row; a row with ``ctx_len == 0``
+    (empty prefix) contributes l == 0 so the flash-decoding combine drops
+    it exactly.
+    """
+    squeeze = q.ndim == 3
+    if squeeze:
+        q = q[:, None]
+    B, Q, H, D = q.shape
     n_slots, bs, KV, _ = k_pool.shape
     nblk = slots.shape[1]
     if block_tokens is None:
@@ -21,24 +48,28 @@ def paged_attention_ref(q, k_pool, v_pool, slots, ctx_len, *,
     g = H // KV
     scale = 1.0 / math.sqrt(D)
 
-    safe = jnp.maximum(slots, 0)
-    k = k_pool[safe]                                    # (B, nblk, bs, KV, D)
-    v = v_pool[safe]
+    k = gather_pool_blocks(k_pool, slots)               # (B, nblk, bs, KV, D)
+    v = gather_pool_blocks(v_pool, slots)
     pos = (jnp.arange(nblk)[:, None] * block_tokens
            + tok_offset + jnp.arange(bs)[None, :] * tok_stride)  # (nblk, bs)
     valid = (pos[None] < ctx_len[:, None, None]) & (slots >= 0)[..., None]
 
-    qk = q.astype(jnp.float32).reshape(B, KV, g, D)
-    s = jnp.einsum("bkgd,bjtkd->bkgjt", qk, k.astype(jnp.float32)) * scale
-    s = jnp.where(valid[:, None, None], s, NEG_INF)
-    s = s.reshape(B, KV, g, nblk * bs)
-    m = s.max(axis=-1)
+    qk = q.astype(jnp.float32).reshape(B, Q, KV, g, D)
+    s = jnp.einsum("bqkgd,bjtkd->bkgqjt", qk, k.astype(jnp.float32)) * scale
+    s = jnp.where(valid[:, None, None, None], s, NEG_INF)
+    s = s.reshape(B, KV, g, Q, nblk * bs)
+    m = s.max(axis=-1)                                  # (B, KV, g, Q)
     p = jnp.exp(s - m[..., None])
-    p = jnp.where(valid[:, None, None].reshape(B, 1, 1, -1), p, 0.0)
+    p = jnp.where(valid.reshape(B, 1, 1, 1, -1), p, 0.0)
     l = p.sum(axis=-1)
-    o = jnp.einsum("bkgn,bnkd->bkgd", p,
+    o = jnp.einsum("bkgqn,bnkd->bkgqd", p,
                    v.astype(jnp.float32).reshape(B, nblk * bs, KV, D))
-    return (o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H))
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Q, H, D)
+    m = m.transpose(0, 3, 1, 2).reshape(B, Q, H)
+    l = l.transpose(0, 3, 1, 2).reshape(B, Q, H)
+    if squeeze:
+        return o[:, 0], m[:, 0], l[:, 0]
+    return o, m, l
 
 
 def normalize(o, l):

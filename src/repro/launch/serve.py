@@ -40,6 +40,10 @@ def main() -> None:
                     choices=["hybrid", "flexible_only", "restrictive_only"])
     ap.add_argument("--scheduler", default="fifo",
                     choices=["fifo", "spf", "priority"])
+    ap.add_argument("--prefill-mode", default="prefix_kv",
+                    choices=["prefix_kv", "recompute"],
+                    help="chunk k>0 path: prefix-KV pool read (linear "
+                         "chunk cost) or full-prefix recompute (oracle)")
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="0 = greedy (the fast path)")
     ap.add_argument("--top-k", type=int, default=0)
@@ -60,7 +64,8 @@ def main() -> None:
         max_batch=args.max_batch,
         max_seq_len=S + cfg.frontend_tokens + args.max_new + bs,
         mode=args.mode, prefill_budget=args.prefill_budget,
-        auto_release=True, scheduler=args.scheduler))
+        auto_release=True, scheduler=args.scheduler,
+        prefill_mode=args.prefill_mode))
     def sampling(sid):
         # distinct per-request PRNG streams: one shared seed would make
         # identical prompts produce identical "sampled" token streams

@@ -1,9 +1,11 @@
 """Model zoo: dense/MoE/VLM/audio/hybrid/SSM families."""
 from .transformer import (ModelDims, FwdOptions, model_dims, init_params,
                           forward, loss_fn)
-from .attention import attention, dense_attention, flash_attention_jax
+from .attention import (attention, dense_attention, flash_attention_jax,
+                        causal_attention_parts, merge_attention_parts)
 from . import layers, moe, ssm
 
 __all__ = ["ModelDims", "FwdOptions", "model_dims", "init_params", "forward",
            "loss_fn", "attention", "dense_attention", "flash_attention_jax",
+           "causal_attention_parts", "merge_attention_parts",
            "layers", "moe", "ssm"]

@@ -29,9 +29,19 @@ def _gqa_fold(q: jax.Array, n_kv: int):
 
 def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True,
-                    q_offset: int = 0,
+                    q_offset=0,
                     kv_len: Optional[jax.Array] = None) -> jax.Array:
-    """q: (B,Sq,H,hd), k/v: (B,Skv,Kv,hd) -> (B,Sq,H,hd)."""
+    """q: (B,Sq,H,hd), k/v: (B,Skv,Kv,hd) -> (B,Sq,H,hd).
+
+    ``q_offset`` positions the queries inside the causal mask: a scalar
+    (train/prefill, all rows share the offset) or a ``(B,)`` array — the
+    prefix-KV chunk forward, where each row's chunk starts at its own
+    already-installed context length.  The score/softmax/weighted-sum math
+    is identical in both branches (only the mask construction differs), so
+    a chunk query attending over [gathered prefix + own chunk] K/V laid
+    out at their absolute positions reproduces the full-sequence forward
+    bit for bit.
+    """
     B, Sq, H, D = q.shape
     Skv, Kv = k.shape[1], k.shape[2]
     qf, g = _gqa_fold(q, Kv)
@@ -39,16 +49,64 @@ def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     s = jnp.einsum("bqkgd,bckd->bkgqc", qf.astype(jnp.float32),
                    k.astype(jnp.float32)) * scale
     if causal:
-        qpos = jnp.arange(Sq) + q_offset
         cpos = jnp.arange(Skv)
-        mask = qpos[:, None] >= cpos[None, :]
-        s = jnp.where(mask, s, NEG_INF)
+        off = jnp.asarray(q_offset)
+        if off.ndim == 0:
+            qpos = jnp.arange(Sq) + off
+            mask = qpos[:, None] >= cpos[None, :]
+            s = jnp.where(mask, s, NEG_INF)
+        else:                                  # per-row offsets (B,)
+            qpos = off[:, None] + jnp.arange(Sq)[None, :]
+            mask = qpos[:, :, None] >= cpos[None, None, :]   # (B, Sq, Skv)
+            s = jnp.where(mask[:, None, None], s, NEG_INF)
     if kv_len is not None:
         valid = jnp.arange(Skv)[None, :] < kv_len[:, None]     # (B, Skv)
         s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bkgqc,bckd->bqkgd", p, v.astype(jnp.float32))
     return o.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def causal_attention_parts(q: jax.Array, k: jax.Array, v: jax.Array):
+    """Unnormalized causal attention over a chunk's OWN K/V.
+
+    q: (B,S,H,hd), k/v: (B,S,Kv,hd) -> (o_weighted (B,S,H,hd) f32,
+    m (B,S,H), l (B,S,H)) — the intra-chunk half of the prefix-KV merge,
+    sharing the (m, l) contract of ``kernels.paged_attention`` so the two
+    halves combine with a flash-decoding online-softmax correction
+    (``merge_attention_parts``).  The mask is chunk-relative: query i
+    attends chunk positions j <= i regardless of where the chunk sits in
+    the sequence (the installed prefix is entirely in the other part).
+    """
+    B, Sq, H, D = q.shape
+    Skv, Kv = k.shape[1], k.shape[2]
+    qf, g = _gqa_fold(q, Kv)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bqkgd,bckd->bkgqc", qf.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    m = s.max(axis=-1)                                   # (B,Kv,g,Sq)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask, p, 0.0)
+    l = p.sum(axis=-1)
+    o = jnp.einsum("bkgqc,bckd->bkgqd", p, v.astype(jnp.float32))
+    o = o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, D)
+    return o, m.transpose(0, 3, 1, 2).reshape(B, Sq, H), \
+        l.transpose(0, 3, 1, 2).reshape(B, Sq, H)
+
+
+def merge_attention_parts(parts):
+    """Flash-decoding combine: [(o_weighted, m, l), ...] -> normalized o.
+
+    Each part is an unnormalized online-softmax partial over a disjoint
+    KV range (pool prefix / own chunk / other shards); a part with l == 0
+    everywhere (empty prefix) drops out exactly.
+    """
+    m_glob = functools.reduce(jnp.maximum, [m for _, m, _ in parts])
+    o = sum(o * jnp.exp(m - m_glob)[..., None] for o, m, _ in parts)
+    l = sum(l * jnp.exp(m - m_glob) for _, m, l in parts)
+    return o / jnp.maximum(l, 1e-30)[..., None]
 
 
 def pick_chunk(n: int, target: int) -> int:

@@ -86,13 +86,26 @@ def init_mamba(key, dims: MambaDims, dtype=jnp.float32) -> dict:
     }
 
 
-def _causal_depthwise_conv(xbc: jax.Array, w: jax.Array, b: jax.Array):
-    """xbc: (B, L, C); w: (W, C) depthwise causal."""
+def _causal_depthwise_conv(xbc: jax.Array, w: jax.Array, b: jax.Array,
+                           init: Optional[jax.Array] = None):
+    """xbc: (B, L, C); w: (W, C) depthwise causal.
+
+    ``init`` (B, W-1, C): the trailing conv inputs of an already-processed
+    prefix (prefix-KV chunked prefill).  With it the conv runs VALID over
+    ``concat([init, xbc])`` — every chunk position sees the same real
+    window it would in a full-sequence forward, instead of the zero
+    left-pad a sequence start gets.
+    """
     W, C = w.shape
-    lhs = xbc
+    if init is not None:
+        lhs = jnp.concatenate([init.astype(xbc.dtype), xbc], axis=1)
+        padding = [(0, 0)]
+    else:
+        lhs = xbc
+        padding = [(W - 1, 0)]
     rhs = w[:, None, :]  # (W, 1, C) 'WIO' with feature groups = C
     out = jax.lax.conv_general_dilated(
-        lhs, rhs, window_strides=(1,), padding=[(W - 1, 0)],
+        lhs, rhs, window_strides=(1,), padding=padding,
         dimension_numbers=("NWC", "WIO", "NWC"), feature_group_count=C)
     return out + b
 
@@ -159,34 +172,71 @@ def ssd_chunked(xd: jax.Array, dtA: jax.Array, B_: jax.Array, C_: jax.Array,
 def mamba_forward(p: dict, x: jax.Array, dims: MambaDims, *, chunk: int = 64,
                   pins: Pins = no_pins,
                   initial_state: Optional[jax.Array] = None,
+                  initial_conv: Optional[jax.Array] = None,
+                  seq_len: Optional[jax.Array] = None,
                   return_state: bool = False):
-    """Full mamba2 block on (B, L, D). Returns (out, final_state|None)."""
+    """Full mamba2 block on (B, L, D). Returns (out, final_state|None).
+
+    ``initial_state`` (B, H, P, N) and ``initial_conv`` (B, W-1,
+    conv_channels) continue a previously processed prefix (prefix-KV
+    chunked prefill): the SSD scan starts from the saved state and the
+    depthwise conv's first windows read the prefix's trailing raw xBC
+    inputs, so forwarding ONLY the chunk reproduces the full-sequence
+    forward at the chunk's positions bit for bit.
+
+    ``seq_len`` (B,) marks each row's real length: dt is zeroed past it,
+    which makes every pad position an EXACT identity transition of the
+    SSD recurrence (decay = exp(0) = 1, contribution = x·dt = 0), so the
+    returned state and the real positions' outputs are bitwise invariant
+    to right padding — what lets the serving engine put recurrent
+    families in the same pow2 length buckets as attention ones.  The
+    returned conv tail is gathered at the row's real end, not the padded
+    row end.
+    """
     B, L, D = x.shape
     di, n = dims.d_inner, dims.d_state
+    W1 = dims.conv_width - 1
     z = x @ p["in_z"].astype(x.dtype)
     x_raw = x @ p["in_x"].astype(x.dtype)
     B_raw = x @ p["in_B"].astype(x.dtype)
     C_raw = x @ p["in_C"].astype(x.dtype)
     dt_raw = x @ p["in_dt"].astype(x.dtype)
-    conv_tail = jnp.concatenate(
-        [x_raw, B_raw, C_raw], axis=-1)[:, -(dims.conv_width - 1):, :]
+    xbc_raw = jnp.concatenate([x_raw, B_raw, C_raw], axis=-1)
+    if initial_conv is not None:
+        ic = initial_conv.astype(x.dtype)
+        icx, icB, icC = ic[..., :di], ic[..., di:di + n], ic[..., di + n:]
+    else:
+        ic = jnp.zeros_like(xbc_raw[:, :W1])   # the conv's zero left-pad
+        icx = icB = icC = None
+    if seq_len is None:
+        conv_tail = jnp.concatenate([ic, xbc_raw], axis=1)[:, -W1:, :]
+    else:
+        # raw position p sits at index p + W1 of [ic | xbc_raw]; the tail
+        # window [len-W1, len) is therefore indices [len, len+W1)
+        idx = seq_len[:, None].astype(jnp.int32) + jnp.arange(W1)[None, :]
+        conv_tail = jnp.take_along_axis(
+            jnp.concatenate([ic, xbc_raw], axis=1), idx[..., None], axis=1)
     # depthwise conv applies per channel, so convolving x/B/C separately is
     # exactly the packed conv (keeps each activation shard-aligned)
     cw = p["conv_w"].astype(x.dtype)
     cb = p["conv_b"].astype(x.dtype)
-    xs = jax.nn.silu(_causal_depthwise_conv(x_raw, cw[:, :di], cb[:di]))
+    xs = jax.nn.silu(_causal_depthwise_conv(x_raw, cw[:, :di], cb[:di], icx))
     B_ = jax.nn.silu(_causal_depthwise_conv(
-        B_raw, cw[:, di:di + n], cb[di:di + n]))
+        B_raw, cw[:, di:di + n], cb[di:di + n], icB))
     C_ = jax.nn.silu(_causal_depthwise_conv(
-        C_raw, cw[:, di + n:], cb[di + n:]))
+        C_raw, cw[:, di + n:], cb[di + n:], icC))
     xs = pins("ssm_inner", xs)
     dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,L,H)
+    if seq_len is not None:
+        tok_ok = jnp.arange(L)[None, :] < seq_len[:, None]
+        dt = jnp.where(tok_ok[:, :, None], dt, 0.0)
     A = -jnp.exp(p["A_log"])                                         # (H,)
     xh = xs.reshape(B, L, dims.n_heads, dims.head_dim)
     pad = (-L) % chunk
-    if pad and return_state:
+    if pad and return_state and seq_len is None:
         raise ValueError(f"seq len {L} must divide chunk {chunk} when the "
-                         "final state is needed (prefill)")
+                         "final state is needed (prefill) and no seq_len "
+                         "mask marks the pad tail")
     if pad:
         # zero-pad dt so padded positions are identity transitions; the
         # causal scan makes y[:, :L] exact regardless of the tail

@@ -122,8 +122,16 @@ def init_params(key, cfg: ArchConfig, dims: ModelDims, dtype=jnp.float32):
                     moes.append(_init_ffn(sk[g + i], cfg, dims, dtype, True))
                 else:
                     mlps.append(_init_ffn(sk[g + i], cfg, dims, dtype, False))
-            groups.append({"mamba": _stack(mambas), "attn": attn,
-                           "mlp": _stack(mlps), "moe": _stack(moes)})
+            grp = {"mamba": _stack(mambas), "attn": attn}
+            # a group may be all-MLP (MoE-free hybrid) or all-MoE;
+            # _stack([]) is not a tree, so only present kinds get a key —
+            # the scan bodies select per-sublayer statically via
+            # cfg.moe_on_layer, never touching an absent kind
+            if mlps:
+                grp["mlp"] = _stack(mlps)
+            if moes:
+                grp["moe"] = _stack(moes)
+            groups.append(grp)
         params["layers"] = _stack(groups)
     elif fam == "audio":
         ekeys = jax.random.split(keys[4], cfg.encoder_layers)
@@ -196,6 +204,18 @@ def _ffn(blk, x, cfg, dims, opt, pins):
     return x + pins("act_btd", out), None
 
 
+def hybrid_ffn_select(cfg: ArchConfig, blk, i: int):
+    """The group-local FFN params for sublayer ``i`` of a hybrid group:
+    the MoE stack when ``cfg.moe_on_layer(i)``, else the corresponding
+    stacked MLP.  One source of truth for the group-local index
+    arithmetic — the train forward, the decode step and the prefix-KV
+    chunk step all select through here."""
+    n_moe_before = sum(cfg.moe_on_layer(j) for j in range(i))
+    if cfg.moe_on_layer(i):
+        return jax.tree.map(lambda a, j=n_moe_before: a[j], blk["moe"])
+    return jax.tree.map(lambda a, j=i - n_moe_before: a[j], blk["mlp"])
+
+
 def _zero_aux():
     return {"lb_loss": jnp.zeros((), jnp.float32),
             "z_loss": jnp.zeros((), jnp.float32),
@@ -208,17 +228,24 @@ def _acc_aux(acc, aux):
     return {k: acc[k] + aux[k] for k in acc}
 
 
-def _mamba_block(blk, x, cfg, dims, opt, pins, collect=False):
+def _mamba_block(blk, x, cfg, dims, opt, pins, collect=False,
+                 seq_len=None):
     h = L.rms_norm(x, blk["norm1"].astype(jnp.float32), cfg.norm_eps)
     h = pins("act_full", h)
     out, state = mamba_forward(blk["mamba"], h, dims.mamba,
                                chunk=cfg.ssm_chunk, pins=pins,
-                               return_state=collect)
+                               seq_len=seq_len, return_state=collect)
     return x + pins("act_btd", out), state
 
 
-def _decoder_body(cfg: ArchConfig, dims: ModelDims, opt: FwdOptions, pins):
-    """Returns the scan body for the family's stacked layers."""
+def _decoder_body(cfg: ArchConfig, dims: ModelDims, opt: FwdOptions, pins,
+                  seq_len=None):
+    """Returns the scan body for the family's stacked layers.
+
+    ``seq_len`` (B,) is forwarded to the recurrent (mamba) sublayers so
+    right-padded bucket rows install exact SSM states (pad positions are
+    identity transitions); attention sublayers need no mask — causal
+    attention never reads past the query position."""
     fam = cfg.family
 
     def body(carry, blk):
@@ -232,7 +259,8 @@ def _decoder_body(cfg: ArchConfig, dims: ModelDims, opt: FwdOptions, pins):
                 cache = {"k": k, "v": v}
         elif fam == "ssm":
             x, state = _mamba_block(blk, x, cfg, dims, opt, pins,
-                                    collect=opt.collect_cache)
+                                    collect=opt.collect_cache,
+                                    seq_len=seq_len)
             if opt.collect_cache:
                 cache = {"ssm": state}
         elif fam == "hybrid":
@@ -242,19 +270,15 @@ def _decoder_body(cfg: ArchConfig, dims: ModelDims, opt: FwdOptions, pins):
                 if i < g - 1:
                     sub = jax.tree.map(lambda a, i=i: a[i], blk["mamba"])
                     x, st = _mamba_block(sub, x, cfg, dims, opt, pins,
-                                         collect=opt.collect_cache)
+                                         collect=opt.collect_cache,
+                                         seq_len=seq_len)
                     if opt.collect_cache:
                         ssm_states.append(st)
                     k = v = None
                 else:
                     x, (k, v) = _self_attn(blk["attn"], x, cfg, dims, opt, pins)
-                n_moe_before = sum(cfg.moe_on_layer(j) for j in range(i))
-                if cfg.moe_on_layer(i):
-                    sub = jax.tree.map(lambda a, j=n_moe_before: a[j], blk["moe"])
-                else:
-                    j = i - n_moe_before
-                    sub = jax.tree.map(lambda a, j=j: a[j], blk["mlp"])
-                x, a = _ffn(sub, x, cfg, dims, opt, pins)
+                x, a = _ffn(hybrid_ffn_select(cfg, blk, i), x, cfg, dims,
+                            opt, pins)
                 aux = _acc_aux(aux, a)
             if opt.collect_cache:
                 stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *ssm_states)
@@ -314,6 +338,8 @@ def forward(params, batch: Dict[str, jax.Array], cfg: ArchConfig,
     ``opt.collect_cache``.
     """
     tokens = batch["tokens"]
+    seq_len = batch.get("seq_len")     # (B,) real row lengths (recurrent
+                                       # families' pad-exact state installs)
     x = L.embed(params["embed"], tokens, pins).astype(opt.dtype)
     n_front = 0
     enc_out = None
@@ -330,7 +356,7 @@ def forward(params, batch: Dict[str, jax.Array], cfg: ArchConfig,
     if cfg.family == "audio":
         body = _audio_decoder_body(cfg, dims, opt, pins, enc_out)
     else:
-        body = _decoder_body(cfg, dims, opt, pins)
+        body = _decoder_body(cfg, dims, opt, pins, seq_len)
     if opt.remat:
         body = jax.checkpoint(body)
     (x, aux), caches = jax.lax.scan(body, (x, _zero_aux()), params["layers"])

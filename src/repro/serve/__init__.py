@@ -1,14 +1,15 @@
 from .decode import (DecodeSpec, make_decode_spec, make_serve_step,
                      init_decode_state, abstract_decode_state,
                      decode_state_shardings)
-from .engine import Engine, EngineConfig, Request, RequestOutput
+from .engine import (ChunkRecord, Engine, EngineConfig, Request,
+                     RequestOutput)
 from .sampling import SamplingParams
 from .scheduler import (Scheduler, FIFOScheduler, ShortestPromptFirst,
                         PriorityAgingScheduler, make_scheduler, SCHEDULERS)
 
 __all__ = ["DecodeSpec", "make_decode_spec", "make_serve_step",
            "init_decode_state", "abstract_decode_state",
-           "decode_state_shardings", "Engine", "EngineConfig", "Request",
-           "RequestOutput", "SamplingParams", "Scheduler", "FIFOScheduler",
-           "ShortestPromptFirst", "PriorityAgingScheduler",
-           "make_scheduler", "SCHEDULERS"]
+           "decode_state_shardings", "ChunkRecord", "Engine",
+           "EngineConfig", "Request", "RequestOutput", "SamplingParams",
+           "Scheduler", "FIFOScheduler", "ShortestPromptFirst",
+           "PriorityAgingScheduler", "make_scheduler", "SCHEDULERS"]

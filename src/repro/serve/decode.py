@@ -41,6 +41,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.models import layers as Lmod
+from repro.models import transformer as Tmod
 from repro.models.transformer import ModelDims
 from repro.models.ssm import MambaCache, mamba_decode_step
 from repro.models.moe import moe_decode
@@ -61,6 +62,13 @@ class DecodeSpec:
     data_axes: Tuple[str, ...] = ("data",)
     model_axis: str = "model"
     use_kernels: bool = False    # Pallas path (TPU); ref path otherwise
+    # prefix-KV chunked prefill: how chunk queries read the installed
+    # prefix blocks.  "exact" materializes the gathered K/V at their
+    # absolute positions and reuses the recompute forward's dense softmax
+    # (bit-identical oracle contract); "paged" is the Q>1
+    # kernels/paged_attention read merged by an online-softmax combine
+    # (linear memory, kernel-ready; equal up to float associativity).
+    prefix_gather: str = "exact"
 
     @property
     def nblk(self) -> int:
@@ -555,14 +563,7 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                             kp, kp_l, gi, 0)
                         vp = jax.lax.dynamic_update_index_in_dim(
                             vp, vp_l, gi, 0)
-                    n_moe_before = sum(cfg.moe_on_layer(j) for j in range(i))
-                    if cfg.moe_on_layer(i):
-                        sub = jax.tree.map(lambda a, j=n_moe_before: a[j],
-                                           blk["moe"])
-                    else:
-                        j = i - n_moe_before
-                        sub = jax.tree.map(lambda a, j=j: a[j], blk["mlp"])
-                    x = ffn_sublayer(sub, x)
+                    x = ffn_sublayer(Tmod.hybrid_ffn_select(cfg, blk, i), x)
                 return (x, kp, vp), {"ssm": jnp.stack(ssm_out),
                                      "conv": jnp.stack(conv_out)}
 

@@ -19,7 +19,12 @@ fronted by a request-centric API:
   power-of-two length buckets (bounded compile shapes) and installing
   ALL admitted sequences' KV blocks with one batched prefill dispatch
   per bucket.  Prompts longer than the budget are *chunked* so a long
-  prompt interleaves with decode instead of stalling it;
+  prompt interleaves with decode instead of stalling it; chunks k > 0
+  run the PREFIX-KV step (serve/prefill.py) — only the chunk's own
+  tokens are forwarded, attention reads the prefix from the installed
+  pool blocks and recurrent layers continue saved state, so chunk cost
+  is linear in chunk length (``prefill_mode="recompute"`` keeps the
+  full-re-forward path as the correctness oracle);
 * sampling — per-request temperature / top-k / top-p with per-slot PRNG
   keys runs IN-GRAPH (serve/sampling.py): the engine scatters a
   request's SamplingParams into per-slot device arrays at admission and
@@ -59,7 +64,7 @@ from __future__ import annotations
 import dataclasses
 import warnings
 from collections import defaultdict
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -69,7 +74,7 @@ from repro.configs.base import ArchConfig
 from repro.core import HybridConfig, HybridKVManager, PoolExhausted, SWAP
 from repro.models import FwdOptions, model_dims
 from .decode import DecodeSpec, make_serve_step, init_decode_state
-from .prefill import make_prefill_step
+from .prefill import make_prefill_step, make_prefix_prefill_step
 from .sampling import GREEDY, SamplingParams, prng_key_data
 from .scheduler import Scheduler, make_scheduler
 
@@ -110,6 +115,30 @@ class EngineConfig:
     prefill_budget: Optional[int] = None
     auto_release: bool = False
     scheduler: Any = "fifo"
+    # how chunks k > 0 of a budget-split prompt are prefilled:
+    # "prefix_kv" forwards ONLY the chunk's tokens, attending over the
+    # prefix's installed pool blocks (linear chunk cost); "recompute" is
+    # the PR-2 full-prefix re-forward — the correctness oracle the
+    # differential suite pins prefix_kv against
+    prefill_mode: str = "prefix_kv"
+    # prefix-KV pool read: "exact" (bit-identical dense gather) or
+    # "paged" (Q>1 paged-attention read + online-softmax merge)
+    prefix_gather: str = "exact"
+
+
+class ChunkRecord(NamedTuple):
+    """One admitted prompt chunk in ``Engine.admission_log``.
+
+    ``fwd_tokens`` is the number of tokens actually fed through the chunk
+    forward: ``end - start`` on the prefix-KV path (constant in chunk
+    index — the linearity contract), ``frontend + end`` on the recompute
+    path (grows with every chunk).
+    """
+    seq_id: int
+    start: int
+    end: int
+    path: str          # "prefix_kv" | "recompute"
+    fwd_tokens: int
 
 
 @dataclasses.dataclass(frozen=True, eq=False)
@@ -231,11 +260,26 @@ class Engine:
             mode=config.mode)
         self.track_stats = config.track_stats
         self.manager = HybridKVManager(self.hybrid_cfg)
+        if config.prefill_mode not in ("prefix_kv", "recompute"):
+            raise ValueError(f"unknown prefill_mode {config.prefill_mode!r}"
+                             " (expected 'prefix_kv' or 'recompute')")
+        self.prefill_mode = config.prefill_mode
+        if self.prefill_mode == "prefix_kv" and config.attn_impl != "dense":
+            # the prefix chunk forward implements the dense softmax; mixing
+            # it with a flash/pallas chunk-0 forward would let chunk k>0
+            # drift from the recompute oracle in float summation order
+            warnings.warn(
+                f"prefix-KV chunked prefill is defined against the dense "
+                f"attention forward; falling back to "
+                f"prefill_mode='recompute' for attn_impl="
+                f"{config.attn_impl!r}", stacklevel=2)
+            self.prefill_mode = "recompute"
         self.spec = DecodeSpec(
             block_size=bs, max_blocks_per_seq=max_blocks,
             slots_per_group=self.hybrid_cfg.total_slots,
             n_sets=self.hybrid_cfg.num_sets, assoc=self.hybrid_cfg.assoc,
-            mode="batch", hash_name=self.hybrid_cfg.hash_name)
+            mode="batch", hash_name=self.hybrid_cfg.hash_name,
+            prefix_gather=config.prefix_gather)
         dtype = config.dtype
         self.dstate = init_decode_state(cfg, self.dims, self.spec,
                                         max_batch, 1, dtype=dtype)
@@ -277,6 +321,12 @@ class Engine:
         self._prefill_step = jax.jit(make_prefill_step(
             cfg, self.dims, self.spec, mesh=None, fwd=self.fwd),
             static_argnames=("sample",))
+        # prefix-KV chunk step: chunks k > 0 forward only their own tokens
+        # and read the prefix from the pool (shapes keyed additionally by
+        # the pow2 prefix-buffer width — still a bounded set)
+        self._prefix_step = jax.jit(make_prefix_prefill_step(
+            cfg, self.dims, self.spec, mesh=None, fwd=self.fwd),
+            static_argnames=("sample",))
         self.requests: Dict[int, Request] = {}      # registered, live
         self.finished: Dict[int, Request] = {}
         self._states: Dict[int, RequestState] = {}
@@ -286,8 +336,10 @@ class Engine:
         self._share: Dict[int, Tuple[int, int]] = {}
         self._pending_samp: List[Tuple[int, Request]] = []
         self._step_count = 0                    # scheduler clock (aging)
-        # chunk trace for scheduler tests: (seq_id, start, end) per chunk
-        self.admission_log: List[Tuple[int, int, int]] = []
+        # chunk trace: one ChunkRecord (seq_id, start, end, path,
+        # fwd_tokens) per admitted chunk — scheduler tests pin the order,
+        # the prefix-KV tests pin the per-chunk forward-token linearity
+        self.admission_log: List[ChunkRecord] = []
         self._n_attn_layers = sum(cfg.attn_on_layer(l)
                                   for l in range(cfg.num_layers))
         self._has_recurrent = cfg.family in ("ssm", "hybrid")
@@ -384,9 +436,10 @@ class Engine:
             return []
         m = self.manager
         bs = self.cfg.kv_block_size
+        front = self._front_tokens()
         if budget is None:
             budget = sum(len(np.asarray(r.prompt)) for r in self.waiting)
-        chunks: List[Tuple[Request, int, int, bool]] = []
+        chunks: List[Tuple[Request, int, int, bool, bool]] = []
         while budget >= bs:
             req = self._current
             if req is None:
@@ -426,8 +479,14 @@ class Engine:
             budget -= take
             self._prefilling[req.seq_id] = end
             final = end == total
-            chunks.append((req, start, end, final))
-            self.admission_log.append((req.seq_id, start, end))
+            # chunk 0 has no prefix to read; later chunks consume the
+            # installed prefix unless the oracle flag forces recompute
+            use_prefix = self.prefill_mode == "prefix_kv" and start > 0
+            chunks.append((req, start, end, final, use_prefix))
+            self.admission_log.append(ChunkRecord(
+                req.seq_id, start, end,
+                "prefix_kv" if use_prefix else "recompute",
+                (end - start) if use_prefix else front + end))
             if final:
                 self._current = None
             # a partial chunk stays engine-owned with budget < bs, ending
@@ -437,21 +496,37 @@ class Engine:
         # before any prefill dispatch samples its first token
         self._install_sampling()
 
-        # ---- bucket by padded prefix length; one dispatch per bucket ----
-        # Right padding is exact ONLY under causal attention; a recurrent
-        # (SSM/conv) state integrates the pad tokens, so ssm/hybrid
-        # families bucket at EXACT block-aligned lengths instead of pow2
-        # (more compile shapes, but correct state installs).
+        # ---- bucket by padded length; one dispatch per bucket -----------
+        # Recompute chunks bucket by padded PREFIX length (the forward
+        # redoes the whole prefix); prefix-KV chunks bucket by padded
+        # CHUNK length (only the new tokens are forwarded).  Right padding
+        # is exact under causal attention, and the recurrent (SSM/conv)
+        # families pass per-row ``seq_len`` masks that zero dt past the
+        # real length — pad positions become exact identity transitions —
+        # so EVERY family shares the pow2 buckets (PR-2 bucketed ssm and
+        # hybrid at exact lengths instead).
         pending: List[Tuple[Request, jnp.ndarray]] = []
         buckets: Dict[int, list] = defaultdict(list)
-        for ch in chunks:
-            end_blk = ch[2] // bs
-            s_pad = (ch[2] if self._has_recurrent
-                     else bs * _next_pow2(end_blk))
-            buckets[s_pad].append(ch)
-        front = self._front_tokens()
+        pbuckets: Dict[Tuple[int, int], list] = defaultdict(list)
+        for req, start, end, final, use_prefix in chunks:
+            if use_prefix:
+                take = end - start
+                s_pad = bs * _next_pow2(take // bs)
+                # the prefix read-buffer width must equal the padded KV
+                # extent the recompute forward would pad THIS row to:
+                # float reductions nest bitwise across pow2 tails but not
+                # across arbitrary length pairs, so a shared max-width
+                # buffer would break the bit-identical differential
+                # contract (part of the bucket key, not a bucket max)
+                nblk_buf = front // bs + _next_pow2(end // bs)
+                pbuckets[(s_pad, nblk_buf)].append((req, start, end, final))
+            else:
+                s_pad = bs * _next_pow2(end // bs)
+                buckets[s_pad].append((req, start, end, final))
         for s_pad, grp in sorted(buckets.items()):
             pending.extend(self._prefill_bucket(grp, s_pad, front))
+        for (s_pad, nblk_buf), grp in sorted(pbuckets.items()):
+            pending.extend(self._prefix_bucket(grp, s_pad, nblk_buf, front))
         return pending
 
     def _install_sampling(self) -> None:
@@ -527,6 +602,10 @@ class Engine:
         # allocation-time evictions queued copies: drain before the scatter
         self._apply_copies()
         batch = {"tokens": jnp.asarray(tokens)}
+        if self._has_recurrent:
+            # per-row real lengths: dt is zeroed past them, so the pow2
+            # pad tail is an exact identity transition of the SSM state
+            batch["seq_len"] = jnp.asarray(ctx - front)
         if frontend is not None:
             batch["frontend"] = jnp.asarray(frontend)
         any_sampled = any(not req.sampling.is_greedy
@@ -535,6 +614,75 @@ class Engine:
             self.params, self.dstate, batch, jnp.asarray(slots),
             jnp.asarray(slot_ids), jnp.asarray(ctx), jnp.asarray(last_pos),
             sample=any_sampled)
+        out = []
+        for i, (req, start, end, final) in enumerate(grp):
+            self._ctx_host[slot_ids[i]] = int(ctx[i])
+            if final:
+                out.append((req, pstats["next_token"][i]))
+        return out
+
+    def _prefix_bucket(self, grp, s_pad: int, nblk_buf: int, front: int):
+        """ONE batched prefix-KV dispatch for a bucket of same-shaped
+        chunks: allocate the chunks' new blocks, then forward ONLY the
+        chunk tokens, attending over the prefix's installed pool blocks
+        (gathered via the translated slots) — linear chunk cost.
+
+        ``nblk_buf`` (part of the bucket key) is each row's padded KV
+        extent in blocks, chosen in ``_admit`` to match what the
+        recompute forward would pad the same row to — the bit-identity
+        contract of the differential oracle suite."""
+        m = self.manager
+        bs = self.cfg.kv_block_size
+        B_pad = _next_pow2(len(grp))
+        nblk_chunk = s_pad // bs
+        tokens = np.zeros((B_pad, s_pad), np.int64)
+        new_slots = -np.ones((B_pad, nblk_chunk), np.int32)
+        prefix_slots = -np.ones((B_pad, nblk_buf), np.int32)
+        slot_ids = np.full(B_pad, -1, np.int32)
+        ctx = np.zeros(B_pad, np.int32)
+        pctx = np.zeros(B_pad, np.int32)
+        last_pos = np.zeros(B_pad, np.int32)
+        for i, (req, start, end, final) in enumerate(grp):
+            prompt = np.asarray(req.prompt)
+            take = end - start
+            tokens[i, :take] = prompt[start:end]
+            slot_ids[i] = self._slot_of[req.seq_id]
+            ctx[i] = end + front
+            pctx[i] = start + front
+            last_pos[i] = take - 1
+            if not self._n_attn_layers:
+                continue
+            start_blk = (front + start) // bs
+            for j, cb in enumerate(range(start_blk, (front + end) // bs)):
+                if m.lookup(req.seq_id, cb)[0] >= 0:
+                    continue      # shared-prefix block: already installed
+                info = m.allocate_block(req.seq_id, cb)
+                if info.seg == SWAP:
+                    raise RuntimeError("pool exhausted during prefill")
+                new_slots[i, j] = info.slot
+        # allocation-time evictions queue slot migrations: drain them
+        # BEFORE reading the prefix slots so the gather below sees the
+        # post-copy pool layout
+        self._apply_copies()
+        if self._n_attn_layers:
+            for i, (req, start, end, final) in enumerate(grp):
+                for cb in range((front + start) // bs):
+                    slot, _ = m.lookup(req.seq_id, cb)
+                    if slot < 0:
+                        # a prefix block was evicted to swap: its data is
+                        # gone and the prefix-KV read cannot rebuild it
+                        raise RuntimeError(
+                            "prefix block swapped out during chunked "
+                            "prefill; grow the pool or use "
+                            "prefill_mode='recompute'")
+                    prefix_slots[i, cb] = slot
+        any_sampled = any(not req.sampling.is_greedy
+                          for req, _, _, _ in grp)
+        _, self.dstate, pstats = self._prefix_step(
+            self.params, self.dstate, {"tokens": jnp.asarray(tokens)},
+            jnp.asarray(new_slots), jnp.asarray(prefix_slots),
+            jnp.asarray(slot_ids), jnp.asarray(ctx), jnp.asarray(pctx),
+            jnp.asarray(last_pos), sample=any_sampled)
         out = []
         for i, (req, start, end, final) in enumerate(grp):
             self._ctx_host[slot_ids[i]] = int(ctx[i])

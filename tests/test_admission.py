@@ -137,11 +137,13 @@ def test_interleaved_admission_matches_sequential(setup):
 
 @pytest.mark.parametrize("arch", ["mamba2-130m", "jamba-1.5-large-398b"])
 def test_recurrent_family_nonpow2_prompt_matches_full_forward(arch):
-    """Recurrent (SSM/conv) state integrates pad tokens, so ssm/hybrid
-    buckets must use EXACT lengths: a non-power-of-two block count would
-    otherwise install a state polluted by the pad tail.  The oracle is a
-    full re-forward per step (NOT another engine path — both engine paths
-    share the bucketized prefill, so comparing them would miss this)."""
+    """Recurrent (SSM/conv) state must not integrate the bucket's pad
+    tail: ssm/hybrid rows ride the pow2 buckets with a per-row
+    ``seq_len`` mask that zeroes dt past the real length, making every
+    pad position an exact identity transition (PR 4; PR 2 used exact
+    lengths instead).  The oracle is a full re-forward per step (NOT
+    another engine path — both engine paths share the bucketized
+    prefill, so comparing them would miss this)."""
     from repro.models import forward, FwdOptions
     cfg = reduced(ARCHS[arch])
     dims = model_dims(cfg, tp=1)

@@ -144,6 +144,93 @@ class TestPagedAttentionKernel:
         npt.assert_allclose(np.asarray(out_k), np.asarray(normalize(o, l)),
                             rtol=2e-5, atol=2e-5)
 
+    @pytest.mark.parametrize("shape", [
+        # B, Q, H, KV, D, bs, nblk, nslots
+        (2, 4, 8, 2, 32, 16, 6, 64), (3, 1, 4, 4, 16, 8, 4, 32),
+        (1, 16, 8, 1, 64, 32, 8, 96),
+    ])
+    def test_multi_token_query_vs_ref(self, shape):
+        """Q>1 queries (prefix-KV chunked prefill): Pallas-interpret vs
+        the jnp oracle over ragged ctx_len — block-interior, exact block
+        boundaries, and an EMPTY-prefix row (ctx 0, l == 0 so the
+        flash-decoding combine drops the part exactly) — plus a hole."""
+        B, Q, H, KV, D, bs, nblk, nslots = shape
+        ks = jax.random.split(jax.random.PRNGKey(11), 4)
+        q = jax.random.normal(ks[0], (B, Q, H, D))
+        kp = jax.random.normal(ks[1], (nslots, bs, KV, D))
+        vp = jax.random.normal(ks[2], (nslots, bs, KV, D))
+        slots = jax.random.randint(ks[3], (B, nblk), 0, nslots)
+        slots = slots.at[0, nblk // 2].set(-1)          # hole
+        ctx = np.random.RandomState(1).randint(1, bs * nblk, B)
+        ctx[0] = 0                                      # empty prefix
+        if B > 1:
+            ctx[1] = bs * (nblk // 2)                   # block boundary
+        ctx = jnp.asarray(ctx, jnp.int32)
+        from repro.kernels.paged_attention.paged_attention import (
+            paged_attention_pallas)
+        got = paged_attention_pallas(q, kp, vp, slots, ctx, interpret=True)
+        want = paged_attention_ref(q, kp, vp, slots, ctx)
+        for a, b in zip(got, want):
+            assert a.shape == b.shape == (B, Q, H) + ((D,) if a.ndim == 4
+                                                      else ())
+            npt.assert_allclose(np.asarray(a), np.asarray(b),
+                                rtol=2e-5, atol=2e-5)
+        # empty-prefix row: zero weight everywhere, so normalize -> 0
+        npt.assert_array_equal(np.asarray(normalize(got[0], got[2]))[0], 0.0)
+
+    def test_q1_query_rank_round_trip(self):
+        """A (B,H,D) decode query and its (B,1,H,D) chunk form produce
+        identical results in BOTH implementations (one code path, two
+        ranks)."""
+        B, H, KV, D, bs, nblk, nslots = 2, 4, 2, 16, 8, 4, 32
+        ks = jax.random.split(jax.random.PRNGKey(5), 4)
+        q = jax.random.normal(ks[0], (B, H, D))
+        kp = jax.random.normal(ks[1], (nslots, bs, KV, D))
+        vp = jax.random.normal(ks[2], (nslots, bs, KV, D))
+        slots = jax.random.randint(ks[3], (B, nblk), 0, nslots)
+        ctx = jnp.asarray([13, 27], jnp.int32)
+        from repro.kernels.paged_attention.paged_attention import (
+            paged_attention_pallas)
+        for fn in (paged_attention_ref, paged_attention_pallas):
+            o3, m3, l3 = fn(q, kp, vp, slots, ctx)
+            o4, m4, l4 = fn(q[:, None], kp, vp, slots, ctx)
+            npt.assert_array_equal(np.asarray(o3), np.asarray(o4[:, 0]))
+            npt.assert_array_equal(np.asarray(m3), np.asarray(m4[:, 0]))
+            npt.assert_array_equal(np.asarray(l3), np.asarray(l4[:, 0]))
+
+    def test_multi_token_prefix_plus_chunk_merge_matches_dense(self):
+        """End-to-end prefix-KV attention identity: Q chunk queries over
+        [pool prefix] ∪ [own causal K/V], combined with the online-softmax
+        merge, equals ONE dense causal attention over the concatenated
+        sequence."""
+        from repro.models.attention import (dense_attention,
+                                            causal_attention_parts,
+                                            merge_attention_parts)
+        B, Q, H, KV, D, bs, nblk, nslots = 2, 8, 4, 2, 16, 8, 4, 32
+        P = bs * nblk                                   # prefix tokens
+        ks = jax.random.split(jax.random.PRNGKey(9), 6)
+        q = jax.random.normal(ks[0], (B, Q, H, D))
+        kpre = jax.random.normal(ks[1], (B, P, KV, D))
+        vpre = jax.random.normal(ks[2], (B, P, KV, D))
+        kc = jax.random.normal(ks[3], (B, Q, KV, D))
+        vc = jax.random.normal(ks[4], (B, Q, KV, D))
+        # lay the prefix into pool slots (row b uses slots b*nblk + j)
+        kp = jnp.zeros((nslots, bs, KV, D)).at[:2 * nblk].set(
+            kpre.reshape(B * nblk, bs, KV, D))
+        vp = jnp.zeros((nslots, bs, KV, D)).at[:2 * nblk].set(
+            vpre.reshape(B * nblk, bs, KV, D))
+        slots = (jnp.arange(B)[:, None] * nblk
+                 + jnp.arange(nblk)[None, :]).astype(jnp.int32)
+        ctx = jnp.full((B,), P, jnp.int32)
+        pool = paged_attention_ref(q, kp, vp, slots, ctx)
+        own = causal_attention_parts(q, kc, vc)
+        merged = merge_attention_parts([pool, own])
+        dense = dense_attention(
+            q, jnp.concatenate([kpre, kc], axis=1),
+            jnp.concatenate([vpre, vc], axis=1), causal=True, q_offset=P)
+        npt.assert_allclose(np.asarray(merged), np.asarray(dense),
+                            rtol=2e-5, atol=2e-5)
+
     def test_striped_token_shards_combine(self):
         """Model-axis token striping: shard partials must combine exactly."""
         B, H, KV, D, bs, nblk, nslots = 2, 4, 2, 16, 16, 4, 32
