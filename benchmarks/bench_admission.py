@@ -81,7 +81,9 @@ def run_one(cfg, params, path: str, n_req: int, blocks, max_batch: int,
         assert all(r.done for r in reqs)
         return dt, steps
 
+    t0 = time.perf_counter()
     one_pass(0)                      # warmup: compile every bucket shape
+    compile_s = time.perf_counter() - t0
     dt, steps = one_pass(n_req)
     tokens = int(sum(len(r.prompt) for r in
                      _requests(cfg, np.random.RandomState(0), n_req,
@@ -94,6 +96,10 @@ def run_one(cfg, params, path: str, n_req: int, blocks, max_batch: int,
         "prefill_budget": eng.prefill_budget,
         "engine_steps": steps,
         "wall_s": round(dt, 4),
+        # warmup-pass wall (XLA compiles + first-shape scatters), kept
+        # OUT of the measured pass so wall_s trajectories compare
+        # PR-over-PR (ISSUE 5 reporting fix)
+        "compile_wall_s": round(compile_s, 4),
         "admitted_tokens_per_s": round(tokens / dt, 1),
         "requests_per_s": round(n_req / dt, 2),
     }

@@ -24,11 +24,15 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import summarize_times  # noqa: E402
 
 from repro.configs import ARCHS, reduced
 from repro.core import translate
@@ -141,27 +145,29 @@ def run_one(engine_cls, cfg, params, mode: str, max_batch: int,
                                 prompt=rng.randint(0, cfg.vocab_size,
                                                    2 * bs),
                                 max_new_tokens=horizon + 2))
+    t_compile = time.perf_counter()
     for _ in range(warmup):
         eng.step()
+    t_compile = time.perf_counter() - t_compile
     times = []
     for _ in range(steps):
         t0 = time.perf_counter()
         out = eng.step()
         times.append(time.perf_counter() - t0)
         assert len(out) == max_batch
-    # median = steady-state latency (excludes the one-time XLA compiles a
-    # fresh scatter-bucket shape triggers on its first appearance)
-    med = float(np.median(times))
-    return {
+    # median + warmup-excluded steady mean; a timed step that still hit a
+    # one-time XLA compile (a fresh scatter-bucket shape) is reported
+    # separately as a compile spike instead of polluting the mean
+    r = {
         "engine": "legacy_emulated" if engine_cls is LegacyEngine
                   else "current",
         "mode": mode,
         "max_batch": max_batch,
         "steps": steps,
-        "step_ms": round(med * 1e3, 3),
-        "step_ms_mean": round(float(np.mean(times)) * 1e3, 3),
-        "tokens_per_step_s": round(max_batch / med, 1),
     }
+    r.update(summarize_times(times, compile_s=t_compile))
+    r["tokens_per_step_s"] = round(max_batch / (r["step_ms"] / 1e3), 1)
+    return r
 
 
 def main() -> None:

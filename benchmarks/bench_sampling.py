@@ -21,10 +21,14 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import sys
 import time
 
 import jax
 import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from common import summarize_times  # noqa: E402
 
 from repro.configs import ARCHS, reduced
 from repro.models import model_dims, init_params
@@ -62,9 +66,12 @@ def run_batch(cfg, params, max_batch: int, warmup: int,
     horizon = warmup + steps + 2
     engines = {v: _build(cfg, params, v, max_batch, horizon)
                for v in VARIANTS}
-    for eng in engines.values():
+    compile_s = {}
+    for v, eng in engines.items():
+        t0 = time.perf_counter()
         for _ in range(warmup):
             eng.step()
+        compile_s[v] = time.perf_counter() - t0
     times = {v: [] for v in VARIANTS}
     for _ in range(steps):
         for v, eng in engines.items():
@@ -74,15 +81,10 @@ def run_batch(cfg, params, max_batch: int, warmup: int,
             assert len(out) == max_batch
     results = []
     for v in VARIANTS:
-        med = float(np.median(times[v]))
-        results.append({
-            "variant": v,
-            "max_batch": max_batch,
-            "steps": steps,
-            "step_ms": round(med * 1e3, 3),
-            "step_ms_mean": round(float(np.mean(times[v])) * 1e3, 3),
-            "tokens_per_step_s": round(max_batch / med, 1),
-        })
+        r = {"variant": v, "max_batch": max_batch, "steps": steps}
+        r.update(summarize_times(times[v], compile_s=compile_s[v]))
+        r["tokens_per_step_s"] = round(max_batch / (r["step_ms"] / 1e3), 1)
+        results.append(r)
     return results
 
 

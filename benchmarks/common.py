@@ -37,3 +37,43 @@ def zipf_block_stream(n_seqs: int, blocks_per_seq: int, n_accesses: int,
 
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.2f},{derived}"
+
+
+def summarize_times(times_s, compile_s: float | None = None,
+                    outlier_factor: float = 3.0) -> Dict[str, float]:
+    """Separate steady state from compile events in per-step wall times.
+
+    The engine benchmarks warm up before timing, but a timed step can
+    still trigger a one-time XLA compile the warmup never reached (a
+    fresh pow2 scatter-bucket shape first appearing mid-run).  A plain
+    mean folds those multi-ms spikes into "steady state" — ISSUE 5's
+    motivating example: BENCH_engine_step.json showed mean 50.6 ms
+    against median 2.72 ms — which makes BENCH_*.json trajectories
+    incomparable PR-over-PR.  This helper reports:
+
+    * ``step_ms``        — median (the steady-state latency headline);
+    * ``step_ms_mean``   — mean EXCLUDING steps slower than
+      ``outlier_factor`` x median (warmup-excluded steady-state mean);
+    * ``compile_spike_ms`` / ``n_compile_spikes`` — what was excluded,
+      so the report stays honest about total wall time;
+    * ``compile_ms``     — the measured warmup/compile phase wall, when
+      the caller timed it (``compile_s``).
+    """
+    t = np.asarray(list(times_s), np.float64)
+    med = float(np.median(t))
+    spike = t > outlier_factor * med
+    steady = t[~spike] if bool((~spike).any()) else t
+    out = {
+        "step_ms": round(med * 1e3, 3),
+        "step_ms_mean": round(float(steady.mean()) * 1e3, 3),
+        "compile_spike_ms": round(float(t[spike].sum()) * 1e3, 3),
+        "n_compile_spikes": int(spike.sum()),
+        # the steady subset itself, so derived rates (tokens/s etc.) can
+        # be computed over EXACTLY the steps step_ms_mean describes
+        # instead of re-deriving the filter from rounded fields
+        "n_steady_steps": int(steady.size),
+        "steady_wall_s": round(float(steady.sum()), 6),
+    }
+    if compile_s is not None:
+        out["compile_ms"] = round(float(compile_s) * 1e3, 3)
+    return out

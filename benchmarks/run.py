@@ -3,9 +3,17 @@
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms come from
 ``benchmarks/roofline.py`` (reads the dry-run JSONs); everything here runs
 live on CPU with the real mechanisms at reduced scale.
+
+``--all`` additionally aggregates every ``BENCH_*.json`` at the repo
+root into ONE ``BENCH_summary.json`` trajectory table — (benchmark, key
+metric, value) rows — and prints it, so a CI log shows the perf
+trajectory of the serving stack at a glance without opening each file.
 """
 from __future__ import annotations
 
+import argparse
+import glob
+import json
 import os
 import sys
 import traceback
@@ -13,6 +21,8 @@ import traceback
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 from common import csv_row  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 MODULES = [
     "bench_structure_size",     # Fig. 13
@@ -26,18 +36,94 @@ MODULES = [
     "bench_roofline_summary",   # §Roofline headline (from dry-run JSONs)
 ]
 
+# the headline metric(s) to lift out of each engine benchmark's JSON:
+# dotted paths into (possibly nested) dicts; every leaf of a matched
+# dict becomes one summary row
+KEY_METRICS = {
+    "engine_step": ["speedup_vs_pre_pr"],
+    "admission": ["speedup_batched_vs_per_request"],
+    "sampling": ["sampled_over_greedy_step_ratio"],
+    "prefix_prefill": ["fwd_token_ratio_recompute_over_prefix",
+                       "admission_speedup_prefix_over_recompute"],
+    "spec_decode": ["tokens_per_s_speedup_spec_on_over_off",
+                    "step_latency_ratio_spec_on_over_off",
+                    "acceptance_rate"],
+}
+
+
+def summarize_bench_jsons(root: str = ROOT,
+                          out: str | None = None) -> list:
+    """Aggregate BENCH_*.json records into a (benchmark, metric, value)
+    trajectory table; write it to ``out`` and return the rows."""
+    rows = []
+    for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
+        if os.path.basename(path) == "BENCH_summary.json":
+            continue
+        try:
+            with open(path) as f:
+                rec = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            rows.append({"benchmark": os.path.basename(path),
+                         "metric": "UNREADABLE", "value": str(e)})
+            continue
+        bench = rec.get("benchmark", os.path.basename(path))
+        metrics = KEY_METRICS.get(bench)
+        if metrics is None:
+            # unknown benchmark: surface every scalar top-level field
+            metrics = [k for k, v in rec.items()
+                       if isinstance(v, (int, float))
+                       and not isinstance(v, bool)]
+        for name in metrics:
+            val = rec.get(name)
+            if isinstance(val, dict):
+                for k, v in sorted(val.items()):
+                    rows.append({"benchmark": bench,
+                                 "metric": f"{name}.{k}", "value": v})
+            elif val is not None:
+                rows.append({"benchmark": bench, "metric": name,
+                             "value": val})
+    if out:
+        with open(out, "w") as f:
+            json.dump({"summary": rows}, f, indent=1)
+    return rows
+
+
+def print_summary(rows) -> None:
+    w = max([len(r["benchmark"]) for r in rows] + [9])
+    wm = max([len(r["metric"]) for r in rows] + [6])
+    print(f"{'benchmark':{w}s}  {'metric':{wm}s}  value")
+    for r in rows:
+        print(f"{r['benchmark']:{w}s}  {r['metric']:{wm}s}  {r['value']}")
+
 
 def main() -> None:
-    print("name,us_per_call,derived")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--all", action="store_true",
+                    help="also aggregate BENCH_*.json into "
+                         "BENCH_summary.json and print the table")
+    ap.add_argument("--summary-only", action="store_true",
+                    help="skip the paper-figure CSV modules; only "
+                         "aggregate the BENCH_*.json trajectory table")
+    args = ap.parse_args()
+
     failures = []
-    for mod_name in MODULES:
-        try:
-            mod = __import__(mod_name)
-            for r in mod.run():
-                print(csv_row(r["name"], r["us"], r["derived"]), flush=True)
-        except Exception:
-            failures.append(mod_name)
-            traceback.print_exc()
+    if not args.summary_only:
+        print("name,us_per_call,derived")
+        for mod_name in MODULES:
+            try:
+                mod = __import__(mod_name)
+                for r in mod.run():
+                    print(csv_row(r["name"], r["us"], r["derived"]),
+                          flush=True)
+            except Exception:
+                failures.append(mod_name)
+                traceback.print_exc()
+    if args.all or args.summary_only:
+        out = os.path.join(ROOT, "BENCH_summary.json")
+        rows = summarize_bench_jsons(ROOT, out)
+        print()
+        print_summary(rows)
+        print(f"\nwrote {out}")
     if failures:
         print(f"FAILED: {failures}", file=sys.stderr)
         sys.exit(1)

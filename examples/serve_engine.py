@@ -90,6 +90,30 @@ def main() -> None:
     eng.manager.check_invariants()
     print("released; invariants OK")
 
+    # ---- speculative decoding: same API, K tokens per dispatch --------
+    # A fresh engine with spec_decode="ngram": each decode dispatch
+    # verifies K self-drafted tokens (prompt-lookup against the slot's
+    # own history) and commits every leading match plus one bonus token.
+    # LOSSLESS: the streams below are token-identical to the run above
+    # whenever the request and params match — speculation only changes
+    # how many steps it takes.
+    print("\n--- speculative decoding (spec_decode='ngram', K=4) ---")
+    spec = Engine(cfg, params, EngineConfig(
+        max_batch=3, max_seq_len=10 * bs, auto_release=True,
+        spec_decode="ngram", num_draft_tokens=4))
+    spec.add_request(Request(seq_id=0, prompt=system_prompt,
+                             max_new_tokens=10))
+    for out in spec.stream():
+        pass
+    st = spec.stats()
+    print(f"seq 0 (spec): {list(spec.finished[0].generated)}")
+    print(f"steps {spec.step_count}, drafted={st['spec_drafted']} "
+          f"accepted={st['spec_accepted']} (acceptance "
+          f"{st['spec_accepted'] / max(st['spec_drafted'], 1):.0%})")
+    assert list(spec.finished[0].generated) \
+        == list(results[0].token_ids), "lossless contract violated"
+    print("spec-on stream identical to spec-off: OK")
+
 
 if __name__ == "__main__":
     main()

@@ -115,6 +115,20 @@ class HybridKVManager:
         del self.seq_lengths[s]
         self._free_seq_slots.append(s)
 
+    def free_block(self, seq_id: int, block_idx: int) -> bool:
+        """Deallocate ONE block of a live sequence (speculative decode:
+        a rejected draft tail crossed a block boundary, so the block it
+        faulted in holds nothing committed).  RestSeg/FlexSeg bookkeeping
+        — TAR/SF clears, flex-table unmap, refcounts, dirty marks for the
+        delta sync — is the shared :meth:`_release` path.  Returns False
+        when the block is not mapped (already freed / never allocated)."""
+        s = self.seq_slot(seq_id)
+        vpn = self.cfg.vpn(s, block_idx)
+        if vpn not in self.blocks:
+            return False
+        self._release(vpn)
+        return True
+
     # ---------------------------------------------------------- allocation
     def allocate_block(self, seq_id: int, block_idx: int,
                        writable: bool = True, *,

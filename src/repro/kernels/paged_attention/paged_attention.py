@@ -61,20 +61,26 @@ def _paged_attn_kernel(slots_ref, ctx_ref, q_ref, k_ref, v_ref,
     scale = 1.0 / math.sqrt(D)
 
     slot = slots_ref[b, j]
-    ctx = ctx_ref[b]
     # global token positions of this (block, local-token-shard) tile
     pos = j * block_tokens + tok_offset + jnp.arange(bs) * tok_stride
-    valid = (pos < ctx) & (slot >= 0)                   # (bs,)
+    if ctx_ref.ndim == 1:
+        # one extent for every query of the row (decode / prefix read)
+        valid = ((pos < ctx_ref[b]) & (slot >= 0))[None, :]      # (1, bs)
+    else:
+        # per-query extents (speculative verify): query i of the draft
+        # window sees ctx_ref[b, i] pool tokens — the sequential causal
+        # mask, applied inside the shared pool-block DMA
+        valid = (pos[None, :] < ctx_ref[b][:, None]) & (slot >= 0)  # (Q, bs)
 
     qk = q.reshape(Q, KV, g, D)
     s = jnp.einsum("qkgd,tkd->qkgt", qk, k) * scale     # (Q, KV, g, bs)
-    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
 
     m_prev = m_scr[...]                                 # (Q, KV, g)
     l_prev = l_scr[...]
     m_new = jnp.maximum(m_prev, s.max(axis=-1))
     p = jnp.exp(s - m_new[..., None])
-    p = jnp.where(valid[None, None, None, :], p, 0.0)
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
     corr = jnp.exp(m_prev - m_new)
     l_new = l_prev * corr + p.sum(axis=-1)
     acc_ref[...] = acc_ref[...] * corr[..., None] + jnp.einsum(
@@ -95,9 +101,10 @@ def paged_attention_pallas(q: jax.Array, k_pool: jax.Array, v_pool: jax.Array,
                            block_tokens: int | None = None,
                            interpret: bool = True):
     """q (B,H,D) or (B,Q,H,D); k/v_pool (slots, bs_local, KV, D);
-    slots (B, nblk) int32; ctx_len (B,) int32.  Returns
-    (o_weighted (B[,Q],H,D), m (B[,Q],H), l (B[,Q],H)) — output rank
-    follows the query rank.
+    slots (B, nblk) int32; ctx_len (B,) int32 — or (B, Q) for the
+    speculative-verify shape, giving every query its own attended
+    extent.  Returns (o_weighted (B[,Q],H,D), m (B[,Q],H),
+    l (B[,Q],H)) — output rank follows the query rank.
 
     ``tok_offset``/``tok_stride`` describe which global token positions the
     local pool token-shard holds (model-axis token striping); on a single

@@ -1,12 +1,19 @@
 """Pure-jnp oracle for paged attention over the hybrid pool.
 
 Supports one query per sequence (decode, ``q (B, H, D)``) and multi-token
-queries (prefix-KV chunked prefill, ``q (B, Q, H, D)``): every query of a
-row attends the same pool extent ``ctx_len[b]`` — the installed prefix.
-Causal structure *within* a chunk is the caller's separate part (see
-``models.attention.causal_attention_parts``), merged through the
-unnormalized ``(o_weighted, m, l)`` contract this oracle shares with the
-Pallas kernel.
+queries (``q (B, Q, H, D)``) in two flavours:
+
+* prefix-KV chunked prefill: every query of a row attends the same pool
+  extent ``ctx_len[b]`` — the installed prefix.  Causal structure
+  *within* a chunk is the caller's separate part (see
+  ``models.attention.causal_attention_parts``), merged through the
+  unnormalized ``(o_weighted, m, l)`` contract this oracle shares with
+  the Pallas kernel.
+* speculative-decode verify: ``ctx_len (B, Q)`` gives every query its
+  OWN extent — query ``i`` of the draft window attends ``pos + i + 1``
+  pool positions, the exact mask sequential decode would apply, so the
+  causal structure of the window lives entirely in the pool read (the
+  K+1 tokens' K/V are written to their pool slots before the read).
 """
 from __future__ import annotations
 
@@ -32,10 +39,12 @@ def paged_attention_ref(q, k_pool, v_pool, slots, ctx_len, *,
 
     ``q`` is (B, H, D) — decode, one token per sequence — or (B, Q, H, D)
     — Q chunk tokens per sequence; outputs follow the query rank:
-    (B[, Q], H, D) / (B[, Q], H).  ``ctx_len`` (B,) bounds the attended
-    pool positions for every query of the row; a row with ``ctx_len == 0``
-    (empty prefix) contributes l == 0 so the flash-decoding combine drops
-    it exactly.
+    (B[, Q], H, D) / (B[, Q], H).  ``ctx_len`` bounds the attended pool
+    positions: ``(B,)`` applies one extent to every query of the row
+    (prefix read), ``(B, Q)`` gives each query its own extent (the
+    speculative-verify shape: query ``i`` sees ``pos + i + 1`` tokens).
+    A query with extent 0 contributes l == 0 so the flash-decoding
+    combine drops it exactly.
     """
     squeeze = q.ndim == 3
     if squeeze:
@@ -52,15 +61,24 @@ def paged_attention_ref(q, k_pool, v_pool, slots, ctx_len, *,
     v = gather_pool_blocks(v_pool, slots)
     pos = (jnp.arange(nblk)[:, None] * block_tokens
            + tok_offset + jnp.arange(bs)[None, :] * tok_stride)  # (nblk, bs)
-    valid = (pos[None] < ctx_len[:, None, None]) & (slots >= 0)[..., None]
+    if ctx_len.ndim == 1:
+        # one extent per row, identical for every query (broadcast at the
+        # query axis keeps the 1-D path's arrays — and results — bitwise
+        # unchanged)
+        ctx_q = ctx_len[:, None]                        # (B, 1)
+    else:
+        ctx_q = ctx_len                                 # (B, Q)
+    valid = ((pos[None, None] < ctx_q[:, :, None, None])
+             & (slots >= 0)[:, None, :, None])          # (B, Qc, nblk, bs)
+    vflat = valid.reshape(B, 1, 1, valid.shape[1], -1)  # (B,1,1,Qc,nblk*bs)
 
     qk = q.astype(jnp.float32).reshape(B, Q, KV, g, D)
     s = jnp.einsum("bqkgd,bjtkd->bkgqjt", qk, k.astype(jnp.float32)) * scale
-    s = jnp.where(valid[:, None, None, None], s, NEG_INF)
     s = s.reshape(B, KV, g, Q, nblk * bs)
+    s = jnp.where(vflat, s, NEG_INF)
     m = s.max(axis=-1)                                  # (B, KV, g, Q)
     p = jnp.exp(s - m[..., None])
-    p = jnp.where(valid.reshape(B, 1, 1, 1, -1), p, 0.0)
+    p = jnp.where(vflat, p, 0.0)
     l = p.sum(axis=-1)
     o = jnp.einsum("bkgqn,bnkd->bkgqd", p,
                    v.astype(jnp.float32).reshape(B, nblk * bs, KV, D))

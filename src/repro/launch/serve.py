@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m repro.launch.serve --arch granite-8b \\
         --requests 8 --max-new 16 [--mode hybrid|flexible_only|restrictive_only] \\
         [--prefill-budget 128] [--scheduler fifo|spf|priority] \\
-        [--temperature 0.8 --top-k 40 --top-p 0.95 --seed 0]
+        [--temperature 0.8 --top-k 40 --top-p 0.95 --seed 0] \\
+        [--spec-decode --num-draft-tokens 4]
 
 Drives the request-centric engine API: requests are submitted up front
 with per-request SamplingParams, the configured Scheduler admits them
@@ -51,6 +52,13 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=None,
                     help="base sampling seed; request sid uses seed + sid "
                          "(default: per-request seq_id)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="speculative decoding: self-drafted n-gram "
+                         "drafts verified in-graph, K tokens per "
+                         "dispatch (lossless — streams are identical to "
+                         "spec-off; recurrent families fall back)")
+    ap.add_argument("--num-draft-tokens", type=int, default=4,
+                    help="draft window width K (with --spec-decode)")
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
@@ -60,12 +68,17 @@ def main() -> None:
     params = init_params(jax.random.PRNGKey(0), cfg, dims)
     bs = cfg.kv_block_size
     S = args.prompt_blocks * bs
+    # the spec window writes up to K positions past the committed ctx:
+    # give the sequence that much block headroom
+    spec_pad = args.num_draft_tokens + bs if args.spec_decode else 0
     eng = Engine(cfg, params, EngineConfig(
         max_batch=args.max_batch,
-        max_seq_len=S + cfg.frontend_tokens + args.max_new + bs,
+        max_seq_len=S + cfg.frontend_tokens + args.max_new + bs + spec_pad,
         mode=args.mode, prefill_budget=args.prefill_budget,
         auto_release=True, scheduler=args.scheduler,
-        prefill_mode=args.prefill_mode))
+        prefill_mode=args.prefill_mode,
+        spec_decode="ngram" if args.spec_decode else None,
+        num_draft_tokens=args.num_draft_tokens))
     def sampling(sid):
         # distinct per-request PRNG streams: one shared seed would make
         # identical prompts produce identical "sampled" token streams
@@ -88,22 +101,33 @@ def main() -> None:
         tokens += len(out.new_token_ids)
     dt = time.time() - t0
     steps = eng.step_count
+    spec_note = (f", spec K={args.num_draft_tokens}" if eng.spec_K
+                 else "")
     print(f"arch={cfg.name} mode={args.mode} sched={args.scheduler}: "
           f"{args.requests} requests, {tokens} tokens in {dt:.2f}s "
           f"({tokens / dt:.1f} tok/s, {steps} engine steps, "
           f"budget={eng.prefill_budget} tok/step, "
-          f"temp={args.temperature})")
+          f"temp={args.temperature}{spec_note})")
     st = eng.stats()
     total = st.get("rsw_hits", 0) + st.get("flex_walks", 0)
     print(f"translation: rsw_hit_rate="
           f"{st.get('rsw_hits', 0) / max(total, 1):.2%} "
           f"migrations={st.get('migrations_rest_to_flex', 0) + st.get('migrations_flex_to_rest', 0)} "
           f"swaps={st.get('swap_out', 0)}")
+    if eng.spec_K:
+        print(f"speculation: drafted={st['spec_drafted']} "
+              f"accepted={st['spec_accepted']} "
+              f"(acceptance "
+              f"{st['spec_accepted'] / max(st['spec_drafted'], 1):.2%})")
     for sid, row in sorted(st["per_request"].items()):
         seen = row["rsw_hits"] + row["flex_walks"]
+        spec_row = ""
+        if eng.spec_K:
+            spec_row = (f" accepted={row['accepted']}/{row['drafted']}"
+                        f" ({row['accepted'] / max(row['drafted'], 1):.0%})")
         print(f"  seq {sid}: rsw_hits={row['rsw_hits']}/{seen} "
               f"flex_walks={row['flex_walks']} "
-              f"swap_faults={row['swap_faults']}")
+              f"swap_faults={row['swap_faults']}{spec_row}")
 
 
 if __name__ == "__main__":

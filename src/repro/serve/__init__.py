@@ -6,10 +6,12 @@ from .engine import (ChunkRecord, Engine, EngineConfig, Request,
 from .sampling import SamplingParams
 from .scheduler import (Scheduler, FIFOScheduler, ShortestPromptFirst,
                         PriorityAgingScheduler, make_scheduler, SCHEDULERS)
+from .spec_decode import make_spec_decode_step, propose_ngram_drafts
 
 __all__ = ["DecodeSpec", "make_decode_spec", "make_serve_step",
            "init_decode_state", "abstract_decode_state",
            "decode_state_shardings", "ChunkRecord", "Engine",
            "EngineConfig", "Request", "RequestOutput", "SamplingParams",
            "Scheduler", "FIFOScheduler", "ShortestPromptFirst",
-           "PriorityAgingScheduler", "make_scheduler", "SCHEDULERS"]
+           "PriorityAgingScheduler", "make_scheduler", "SCHEDULERS",
+           "make_spec_decode_step", "propose_ngram_drafts"]

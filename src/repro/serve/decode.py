@@ -167,6 +167,10 @@ def decode_state_shardings(state_shape, mesh: Mesh, spec: DecodeSpec):
         "samp_topk": P(),
         "samp_topp": P(),
         "samp_key": P(),
+        # speculative-decode token history (serve/spec_decode.py): the
+        # engine installs it only when spec decoding is configured, so
+        # the spec-off decode state stays exactly the PR-4 pytree
+        "hist": P(),
     }
 
     def guard(name, leaf):
@@ -377,6 +381,61 @@ def _paged_attn_shardmap(q, k_new, v_new, k_pool_l, v_pool_l, slots, w_slot,
               pos)
 
 
+# ---------------------------------------------- shared decode sublayers
+#
+# One definition each for the pieces the scalar decode step and the
+# speculative verify step (serve/spec_decode.py) must keep EXACTLY in
+# sync — the lossless spec contract rests on the two paths computing the
+# same function.  All are rank-generic over the leading axes: the scalar
+# step passes (B, D) activations, the verify step (B, K+1, D); the
+# reshapes are identities for the scalar shapes, so the scalar trace is
+# bitwise the pre-refactor one.
+
+def decode_ffn(blk, x, cfg: ArchConfig, pins) -> jax.Array:
+    """Post-attention FFN sublayer (dense MLP or decode-time MoE)."""
+    h = Lmod.rms_norm(x, blk["norm2"].astype(jnp.float32), cfg.norm_eps)
+    if "moe" in blk:
+        lead = h.shape[:-1]
+        out = moe_decode(blk["moe"], h.reshape(-1, h.shape[-1]),
+                         top_k=cfg.moe_top_k,
+                         pins=pins).reshape(*lead, -1)
+    else:
+        out = Lmod.mlp(blk["mlp"], h, pins)
+    return x + pins("dec_bd", out)
+
+
+def decode_cross(blk, x, ck, cv, cfg: ArchConfig, dims: ModelDims, pins
+                 ) -> jax.Array:
+    """Audio cross-attention over the installed per-slot cross K/V."""
+    lead = x.shape[:-1]                       # (B,) or (B, Q)
+    B = lead[0]
+    h = Lmod.rms_norm(x, blk["norm_x"].astype(jnp.float32), cfg.norm_eps)
+    q = Lmod.linear(blk["cross"]["q"], h)
+    g = dims.n_heads // dims.n_kv
+    qf = q.reshape(B, -1, dims.n_kv, g,
+                   dims.head_dim).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bfkd->bqkgf", qf, ck.astype(jnp.float32))
+    s = s / math.sqrt(dims.head_dim)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bqkgf,bfkd->bqkgd", p, cv.astype(jnp.float32))
+    o = o.reshape(*lead, -1).astype(x.dtype)
+    return x + pins("dec_bd", Lmod.linear(blk["cross"]["o"], o))
+
+
+def project_logits(params, x, cfg: ArchConfig, dims: ModelDims, pins
+                   ) -> jax.Array:
+    """Final norm -> (tied) head matmul -> vocab-pad mask -> pins."""
+    x = Lmod.rms_norm(x, params["final_norm"].astype(jnp.float32),
+                      cfg.norm_eps)
+    head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head["table"].T.astype(x.dtype)
+    vpad = logits.shape[-1]
+    if vpad > dims.logical_vocab:
+        mask = jnp.arange(vpad) < dims.logical_vocab
+        logits = jnp.where(mask, logits, jnp.asarray(-1e9, logits.dtype))
+    return pins("dec_logits", logits)
+
+
 # --------------------------------------------------------- full serve step
 
 def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
@@ -431,12 +490,7 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
         return x + pins("dec_bd", o), kp_l, vp_l
 
     def ffn_sublayer(blk, x):
-        h = Lmod.rms_norm(x, blk["norm2"].astype(jnp.float32), cfg.norm_eps)
-        if "moe" in blk:
-            out = moe_decode(blk["moe"], h, top_k=cfg.moe_top_k, pins=pins)
-        else:
-            out = Lmod.mlp(blk["mlp"], h, pins)
-        return x + pins("dec_bd", out)
+        return decode_ffn(blk, x, cfg, pins)
 
     def mamba_sublayer(blk, x, ssm, conv):
         h = Lmod.rms_norm(x, blk["norm1"].astype(jnp.float32), cfg.norm_eps)
@@ -445,18 +499,7 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
         return x + pins("dec_bd", out), cache.state, cache.conv
 
     def cross_sublayer(blk, x, ck, cv, ctx_valid):
-        B = x.shape[0]
-        h = Lmod.rms_norm(x, blk["norm_x"].astype(jnp.float32), cfg.norm_eps)
-        q = Lmod.linear(blk["cross"]["q"], h).reshape(B, dims.n_heads,
-                                                      dims.head_dim)
-        g = dims.n_heads // dims.n_kv
-        qf = q.reshape(B, dims.n_kv, g, dims.head_dim).astype(jnp.float32)
-        s = jnp.einsum("bkgd,bfkd->bkgf", qf, ck.astype(jnp.float32))
-        s = s / math.sqrt(dims.head_dim)
-        p = jax.nn.softmax(s, axis=-1)
-        o = jnp.einsum("bkgf,bfkd->bkgd", p, cv.astype(jnp.float32))
-        o = o.reshape(B, -1).astype(x.dtype)
-        return x + pins("dec_bd", Lmod.linear(blk["cross"]["o"], o))
+        return decode_cross(blk, x, ck, cv, cfg, dims, pins)
 
     n_attn = sum(cfg.attn_on_layer(l) for l in range(cfg.num_layers))
 
@@ -579,15 +622,7 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
         else:
             raise ValueError(fam)
 
-        x = Lmod.rms_norm(x, params["final_norm"].astype(jnp.float32),
-                          cfg.norm_eps)
-        head = params["embed"] if cfg.tie_embeddings else params["lm_head"]
-        logits = x @ head["table"].T.astype(x.dtype)
-        vpad = logits.shape[-1]
-        if vpad > dims.logical_vocab:
-            mask = jnp.arange(vpad) < dims.logical_vocab
-            logits = jnp.where(mask, logits, jnp.asarray(-1e9, logits.dtype))
-        logits = pins("dec_logits", logits)
+        logits = project_logits(params, x, cfg, dims, pins)
         # per-slot sampling in-graph: the engine reads token ids, not the
         # (B, V) logits, so the per-step fetch stays O(B).  Greedy rows
         # (samp_temp == 0) take the exact argmax path; sampled rows fold

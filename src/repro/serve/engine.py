@@ -38,6 +38,12 @@ fronted by a request-centric API:
   output, (iv) feeds that telemetry back to the manager globally AND
   attributed per request (``stats()["per_request"]``), (v) applies
   pending slot migrations as ONE batched gather/scatter (Fig. 16);
+* speculative decoding (``spec_decode="ngram"``, serve/spec_decode.py):
+  every decode dispatch verifies K self-drafted tokens and commits all
+  leading matches plus one bonus token — variable-length advance,
+  rejected-tail block dealloc and eos/max-token truncation rewinds are
+  the engine's commit job; LOSSLESS (greedy and seeded-sampled streams
+  are token-identical to spec-off) and the fetch below stays single;
 * termination: ``max_new_tokens`` ("length") or ``eos_token`` ("stop");
   with ``auto_release=True`` the slot and KV blocks free immediately and
   recycle under sustained load;
@@ -62,6 +68,7 @@ launcher shards across a pod.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import warnings
 from collections import defaultdict
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
@@ -77,6 +84,7 @@ from .decode import DecodeSpec, make_serve_step, init_decode_state
 from .prefill import make_prefill_step, make_prefix_prefill_step
 from .sampling import GREEDY, SamplingParams, prng_key_data
 from .scheduler import Scheduler, make_scheduler
+from .spec_decode import make_spec_decode_step
 
 
 def _pad_pow2(idx: np.ndarray, fill) -> np.ndarray:
@@ -91,6 +99,26 @@ def _pad_pow2(idx: np.ndarray, fill) -> np.ndarray:
 
 def _next_pow2(n: int) -> int:
     return 1 << max(0, int(n - 1).bit_length())
+
+
+@jax.jit
+def _scatter_delta(tar, sf, flex, sets_idx, tar_rows, sf_rows, flex_idx,
+                   flex_vals):
+    """Apply one dirty-delta sync as a SINGLE jitted dispatch.
+
+    The pre-fix path issued up to three eager ``.at[].set`` calls per
+    sync; under speculative decoding — where block dealloc/realloc
+    dirties the tables almost every step — the per-op python dispatch
+    overhead of those eager scatters dominated the verify dispatch
+    itself (~5 ms/step measured on CPU).  Indices are pow2-padded by the
+    caller (bounded executable set, keyed by the two pad lengths);
+    out-of-bounds sentinel indices drop, so an empty side of the delta
+    costs one dropped row.
+    """
+    tar = tar.at[0, sets_idx].set(tar_rows, mode="drop")
+    sf = sf.at[0, sets_idx].set(sf_rows, mode="drop")
+    flex = flex.at[0, flex_idx].set(flex_vals, mode="drop")
+    return tar, sf, flex
 
 
 # ------------------------------------------------------------- request API
@@ -124,6 +152,16 @@ class EngineConfig:
     # prefix-KV pool read: "exact" (bit-identical dense gather) or
     # "paged" (Q>1 paged-attention read + online-softmax merge)
     prefix_gather: str = "exact"
+    # speculative decoding (serve/spec_decode.py): None/False = off (the
+    # default — spec-off is bit-identical to the pre-spec engine);
+    # "ngram" (or True) = self-drafted n-gram / prompt-lookup drafter,
+    # ``num_draft_tokens`` drafts verified per decode dispatch.  Greedy
+    # AND seeded-sampled streams stay token-identical to spec-off
+    # (lossless verification); recurrent (ssm/hybrid) families fall back
+    # to non-speculative decode with a warn-once.
+    spec_decode: Any = None
+    num_draft_tokens: int = 4
+    spec_ngram: int = 2
 
 
 class ChunkRecord(NamedTuple):
@@ -196,6 +234,11 @@ class RequestState:
     rsw_hits: int = 0
     flex_walks: int = 0
     swap_faults: int = 0
+    # speculative-decode telemetry: drafts proposed for / accepted into
+    # this request's stream (rows sum exactly to the engine's global
+    # spec_drafted / spec_accepted counters)
+    drafted: int = 0
+    accepted: int = 0
 
 
 @dataclasses.dataclass(frozen=True)
@@ -214,6 +257,19 @@ class RequestOutput:
 
 
 _LEGACY_KWARGS_WARNED = False
+_SPEC_FALLBACK_WARNED = False
+
+
+def _warn_spec_fallback(family: str) -> None:
+    global _SPEC_FALLBACK_WARNED
+    if _SPEC_FALLBACK_WARNED:
+        return
+    _SPEC_FALLBACK_WARNED = True
+    warnings.warn(
+        f"speculative decoding is not supported for recurrent family "
+        f"{family!r} (ssm/conv state rollback for rejected drafts is "
+        "not cheap — ROADMAP item); falling back to non-speculative "
+        "decode", stacklevel=3)
 
 
 def _warn_legacy_kwargs(kwargs) -> None:
@@ -327,6 +383,35 @@ class Engine:
         self._prefix_step = jax.jit(make_prefix_prefill_step(
             cfg, self.dims, self.spec, mesh=None, fwd=self.fwd),
             static_argnames=("sample",))
+        # ---- speculative decoding (serve/spec_decode.py) ----------------
+        sd = config.spec_decode
+        if sd is True:
+            sd = "ngram"
+        if sd not in (None, False, "ngram"):
+            raise ValueError(f"unknown spec_decode drafter {sd!r} "
+                             "(expected None/False or 'ngram')")
+        self.spec_K = 0
+        if sd:
+            if cfg.family in ("ssm", "hybrid"):
+                # state rollback for rejected drafts is not cheap:
+                # warn once and keep the non-speculative step
+                _warn_spec_fallback(cfg.family)
+            else:
+                if config.num_draft_tokens < 1:
+                    raise ValueError("num_draft_tokens must be >= 1, got "
+                                     f"{config.num_draft_tokens}")
+                self.spec_K = int(config.num_draft_tokens)
+                self._spec_step = jax.jit(make_spec_decode_step(
+                    cfg, self.dims, self.spec, self.spec_K, mesh=None,
+                    dtype=dtype, ngram=config.spec_ngram),
+                    static_argnames=("sample",))
+                # per-slot token history the in-graph drafter matches
+                # against (prompt scattered at admission, accepted tokens
+                # appended in-graph; -1 = unknown)
+                self.dstate["hist"] = jnp.full(
+                    (max_batch, max_seq_len), -1, jnp.int32)
+        self._spec_drafted = 0
+        self._spec_accepted = 0
         self.requests: Dict[int, Request] = {}      # registered, live
         self.finished: Dict[int, Request] = {}
         self._states: Dict[int, RequestState] = {}
@@ -495,6 +580,9 @@ class Engine:
         # newly registered sequences' SamplingParams must be on device
         # before any prefill dispatch samples its first token
         self._install_sampling()
+        # ... and, under speculative decoding, so must their prompt
+        # tokens: the in-graph drafter matches against the history
+        self._install_hist(chunks)
 
         # ---- bucket by padded length; one dispatch per bucket -----------
         # Recompute chunks bucket by padded PREFIX length (the forward
@@ -559,6 +647,32 @@ class Engine:
             jnp.asarray(pad(np.asarray([p.top_p for p in sp], np.float32))))
         self.dstate["samp_key"] = self.dstate["samp_key"].at[ji].set(
             jnp.asarray(pad(keys.astype(np.uint32))))
+
+    def _install_hist(self, chunks) -> None:
+        """Scatter admitted prompt chunks into the per-slot token history
+        the in-graph drafter matches against (ONE pow2-padded flat
+        scatter per admission call; steady-state decode steps append
+        accepted tokens in-graph and never touch this path).  Frontend
+        (vlm) positions stay -1 — no token ever matches them."""
+        if not self.spec_K or not chunks:
+            return
+        H = self.dstate["hist"].shape[1]
+        front = self._front_tokens()
+        idxs, vals = [], []
+        for req, start, end, final, use_prefix in chunks:
+            slot = self._slot_of[req.seq_id]
+            base = slot * H + front + start
+            idxs.append(np.arange(base, base + (end - start), dtype=np.int64))
+            vals.append(np.asarray(req.prompt[start:end], np.int32))
+        idx = np.concatenate(idxs)
+        val = np.concatenate(vals)
+        # pad to pow2 with an out-of-bounds index (dropped): bounded
+        # scatter shapes, same discipline as the dirty-delta syncs
+        idx = _pad_pow2(idx, self.max_batch * H)
+        val = _pad_pow2(val, 0)
+        self.dstate["hist"] = self.dstate["hist"].reshape(-1).at[
+            jnp.asarray(idx)].set(jnp.asarray(val),
+                                  mode="drop").reshape(self.max_batch, H)
 
     def _prefill_bucket(self, grp, s_pad: int, front: int):
         """Allocate blocks and run ONE batched prefill dispatch for a
@@ -725,19 +839,31 @@ class Engine:
             self._synced_full = True
             return
         sets, flex_idx = m.take_dirty()
+        if not sets.size and not flex_idx.size:
+            return
+        # pad to pow2 with a duplicate index (same value — benign); an
+        # empty side passes one out-of-bounds sentinel row that the
+        # jitted scatter drops.  ONE dispatch applies the whole delta.
         if sets.size:
-            # pad to pow2 with a duplicate index (same value — benign)
             sets = _pad_pow2(sets, sets[0])
-            js = jnp.asarray(sets)
-            self.dstate["tar"] = self.dstate["tar"].at[0, js].set(
-                jnp.asarray(m.tar[sets]))
-            self.dstate["sf"] = self.dstate["sf"].at[0, js].set(
-                jnp.asarray(m.sf[sets]))
+            tar_rows, sf_rows = m.tar[sets], m.sf[sets]
+        else:
+            sets = np.asarray([m.tar.shape[0]], np.int64)
+            tar_rows = np.zeros((1,) + m.tar.shape[1:], m.tar.dtype)
+            sf_rows = np.zeros(1, m.sf.dtype)
+        flat = m.flex_table.reshape(-1)
         if flex_idx.size:
             flex_idx = _pad_pow2(flex_idx, flex_idx[0])
-            jf = jnp.asarray(flex_idx)
-            self.dstate["flex"] = self.dstate["flex"].at[0, jf].set(
-                jnp.asarray(m.flex_table.reshape(-1)[flex_idx]))
+            flex_vals = flat[flex_idx]
+        else:
+            flex_idx = np.asarray([flat.size], np.int64)
+            flex_vals = np.zeros(1, flat.dtype)
+        self.dstate["tar"], self.dstate["sf"], self.dstate["flex"] = \
+            _scatter_delta(
+                self.dstate["tar"], self.dstate["sf"], self.dstate["flex"],
+                jnp.asarray(sets), jnp.asarray(tar_rows),
+                jnp.asarray(sf_rows), jnp.asarray(flex_idx),
+                jnp.asarray(flex_vals))
 
     def _apply_copies(self) -> None:
         """Apply pending slot migrations as ONE gather/scatter per pool.
@@ -769,7 +895,14 @@ class Engine:
     def step(self) -> Dict[int, int]:
         """One engine step: admit under the prefill budget, then decode
         all live sequences.  Returns {seq_id: token} for every sequence
-        that produced a token (prefill completions AND decodes)."""
+        that produced a token (prefill completions AND decodes).
+
+        With speculative decoding a step can commit SEVERAL tokens per
+        sequence; the returned value is the LAST token committed this
+        step (the scalar contract preserved for direct-step drivers).
+        Consume the full stream through ``poll()`` / ``stream()`` —
+        their ``RequestOutput.new_token_ids`` carry every committed
+        token — or ``Request.generated``."""
         self._step_count += 1
         fetch = {}
         pending = self._admit(self.prefill_budget)
@@ -780,6 +913,8 @@ class Engine:
                 and sid not in self._prefilling]
         m = self.manager
         bs = self.cfg.kv_block_size
+        K = self.spec_K
+        nblk = self.spec.max_blocks_per_seq
         if live:
             # allocate current blocks at boundaries; gather last tokens —
             # all from host state, no device reads
@@ -790,11 +925,24 @@ class Engine:
                 slot = self._slot_of[sid]
                 active[slot] = True
                 pos = int(self._ctx_host[slot])
-                if self._n_attn_layers and pos % bs == 0:
+                if self._n_attn_layers and not K and pos % bs == 0:
                     info = m.allocate_block(sid, pos // bs)
                     if info.seg == SWAP:
                         info = m.swap_in(sid, pos // bs)
                         st.swap_faults += 1
+                if self._n_attn_layers and K:
+                    # the draft window writes positions [pos, pos+K]:
+                    # ensure every covering block is mapped (a rejected
+                    # tail may have deallocated — or never reached —
+                    # mid-window blocks, so lookup first)
+                    for b in range(pos // bs,
+                                   min((pos + K) // bs, nblk - 1) + 1):
+                        if m.lookup(sid, b)[0] >= 0:
+                            continue
+                        info = m.allocate_block(sid, b)
+                        if info.seg == SWAP:
+                            info = m.swap_in(sid, b)
+                            st.swap_faults += 1
                 tokens[slot] = st.generated[-1]
             self._apply_copies()
             self._sync_translation()
@@ -805,11 +953,18 @@ class Engine:
 
             any_sampled = any(not st.request.sampling.is_greedy
                               for st in live)
-            logits, self.dstate, tstats = self._serve_step(
+            step_fn = self._spec_step if K else self._serve_step
+            logits, self.dstate, tstats = step_fn(
                 self.params, self.dstate, jnp.asarray(tokens),
                 jnp.asarray(active), sample=any_sampled)
 
-            fetch["next"] = tstats["next_token"]
+            if K:
+                # (B, K+1) window tokens + per-slot emitted counts ride
+                # the same single fetch the scalar path uses
+                fetch["next"] = tstats["acc_tokens"]
+                fetch["n_emit"] = tstats["n_emit"]
+            else:
+                fetch["next"] = tstats["next_token"]
             fetch["ctx"] = self.dstate["ctx_len"]
             want_stats = self._n_attn_layers and self.track_stats
             if want_stats:
@@ -827,17 +982,18 @@ class Engine:
             self._ctx_host[:] = host["ctx"]
             # ---- feed translation telemetry back (PTW-cost tracking) ----
             if want_stats:
-                nblk = self.spec.max_blocks_per_seq
                 live_slots = [self._slot_of[st.request.seq_id]
                               for st in live]
                 live_mask = np.zeros(self.max_batch, bool)
                 live_mask[live_slots] = True
                 # pre-step block counts: blocks covering positions
-                # [0, pos] — NOT the post-step ctx, whose boundary block
-                # may not exist yet — further masked by the device
-                # ``mapped`` flag so a failed (swapped) allocation is not
-                # recorded as a flexible walk and fed to the promoter
-                n_pre = np.minimum(ctx_pre // bs + 1, nblk)
+                # [0, pos] — [0, pos+K] under speculation, the window the
+                # verify dispatch attends — NOT the post-step ctx, whose
+                # boundary block may not exist yet — further masked by
+                # the device ``mapped`` flag so a failed (swapped)
+                # allocation is not recorded as a flexible walk and fed
+                # to the promoter
+                n_pre = np.minimum((ctx_pre + K) // bs + 1, nblk)
                 valid = (live_mask[:, None]
                          & (np.arange(nblk)[None, :] < n_pre[:, None])
                          & np.asarray(host["mapped"][0], bool))
@@ -855,18 +1011,101 @@ class Engine:
                     st.flex_walks += int(walks_slot[slot])
                 m.run_promotions()
                 self._apply_copies()
-            for st in live:
-                sid = st.request.seq_id
-                nxt = int(host["next"][self._slot_of[sid]])
-                st.generated.append(nxt)
-                st.new_tokens.append(nxt)
-                out[sid] = nxt
-                self._maybe_finish(st, nxt)
+            if K:
+                self._commit_spec(live, host, ctx_pre, out)
+            else:
+                for st in live:
+                    sid = st.request.seq_id
+                    nxt = int(host["next"][self._slot_of[sid]])
+                    st.generated.append(nxt)
+                    st.new_tokens.append(nxt)
+                    out[sid] = nxt
+                    self._maybe_finish(st, nxt)
         for r, _ in pending:
             nxt = int(host[f"p{r.seq_id}"])
             self._complete_prefill(r, nxt)
             out[r.seq_id] = nxt
         return out
+
+    def _commit_spec(self, live, host, ctx_pre, out) -> None:
+        """Variable-length commit of the speculative window.
+
+        The device already advanced ``ctx_len`` by ``n_emit`` in-graph;
+        the host walks the emitted tokens in order, stopping early at
+        eos / ``max_new_tokens`` exactly where sequential decode would.
+        A truncated row's ``ctx_len`` is rewound (one batched scatter —
+        upload, not fetch: the single-``device_get`` contract holds), and
+        blocks a rejected or truncated tail had crossed into are
+        deallocated (they hold nothing committed; KV inside kept blocks
+        needs no rewind — positions at or beyond ``ctx_len`` are masked
+        by every later read and rewritten before they are attended).
+        """
+        m = self.manager
+        bs = self.cfg.kv_block_size
+        K = self.spec_K
+        nblk = self.spec.max_blocks_per_seq
+        rewinds: Dict[int, int] = {}
+        for st in live:
+            sid = st.request.seq_id
+            slot = self._slot_of[sid]
+            pos = int(ctx_pre[slot])
+            # capacity clamp: a window tail past the last KV block had
+            # its K/V writes range-masked in-graph, so tokens emitted
+            # from those query positions are NOT exact — never commit
+            # them (the truncation rewind below restores ctx).  Callers
+            # need no special max_seq_len sizing; overrun costs
+            # re-verification, not correctness.
+            cap = self.spec.max_blocks_per_seq * bs - pos
+            n = min(int(host["n_emit"][slot]), max(cap, 1))
+            toks = host["next"][slot]
+            committed = 0
+            for i in range(n):
+                t = int(toks[i])
+                st.generated.append(t)
+                st.new_tokens.append(t)
+                out[sid] = t
+                committed += 1
+                self._maybe_finish(st, t)
+                if st.done:
+                    break
+            # acceptance telemetry counts REALIZED drafts: the ones that
+            # entered the stream (committed - 1; the +1 bonus token is
+            # the target's own).  Rows sum exactly to the globals by
+            # construction (cross-checked in tests).
+            st.drafted += K
+            st.accepted += committed - 1
+            self._spec_drafted += K
+            self._spec_accepted += committed - 1
+            if sid not in self._slot_of:
+                continue    # finished AND auto-released: state already reset
+            new_ctx = pos + committed
+            if committed < n:
+                rewinds[slot] = new_ctx
+                self._ctx_host[slot] = new_ctx
+            if self._n_attn_layers:
+                # free blocks a rejected/truncated tail faulted in past
+                # the committed context.  A LIVE row keeps the block
+                # containing its next write position (the engine feeds
+                # the committed bonus token there on the very next step:
+                # freeing it would be pure free->refault->resync churn,
+                # ~25% step overhead measured at K=1).  A row that
+                # finished mid-window gets the strict rule — nothing it
+                # won't use may stay mapped.
+                threshold = new_ctx if st.done else new_ctx + 1
+                first_free = (threshold + bs - 1) // bs
+                for b in range(first_free,
+                               min((pos + K) // bs, nblk - 1) + 1):
+                    m.free_block(sid, b)
+        if rewinds:
+            slots = _pad_pow2(np.fromiter(rewinds.keys(), np.int32,
+                                          len(rewinds)),
+                              next(iter(rewinds.keys())))
+            vals = _pad_pow2(np.fromiter(rewinds.values(), np.int64,
+                                         len(rewinds)),
+                             next(iter(rewinds.values())))
+            self.dstate["ctx_len"] = self.dstate["ctx_len"].at[
+                jnp.asarray(slots)].set(
+                    jnp.asarray(vals, self.dstate["ctx_len"].dtype))
 
     # ---------------------------------------------------- streaming output
     @property
@@ -923,6 +1162,9 @@ class Engine:
         slot = self._slot_of.pop(seq_id)
         self.dstate["ctx_len"] = self.dstate["ctx_len"].at[slot].set(0)
         self._ctx_host[slot] = 0
+        if self.spec_K:
+            # a recycled slot must not draft from its predecessor's tokens
+            self.dstate["hist"] = self.dstate["hist"].at[slot].set(-1)
         req = self.requests.pop(seq_id, None)
         if req is not None:
             self.finished[seq_id] = req
@@ -933,11 +1175,19 @@ class Engine:
 
     def stats(self) -> dict:
         """Global manager counters plus ``"per_request"``: RestSeg hits /
-        flexible walks / swap faults attributed to each seq_id (decode
-        steps; live and finished requests both included)."""
+        flexible walks / swap faults — and, under speculative decoding,
+        drafts proposed (``drafted``) and accepted into the stream
+        (``accepted``) — attributed to each seq_id (decode steps; live
+        and finished requests both included).  The per-request
+        ``drafted``/``accepted`` rows sum exactly to the global
+        ``spec_drafted``/``spec_accepted`` counters (same attribution
+        invariant as rsw_hits/flex_walks)."""
         s = dict(self.manager.stats)
+        s["spec_drafted"] = self._spec_drafted
+        s["spec_accepted"] = self._spec_accepted
         s["per_request"] = {
             sid: {"rsw_hits": st.rsw_hits, "flex_walks": st.flex_walks,
-                  "swap_faults": st.swap_faults}
+                  "swap_faults": st.swap_faults, "drafted": st.drafted,
+                  "accepted": st.accepted}
             for sid, st in self._states.items()}
         return s

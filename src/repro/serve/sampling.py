@@ -30,7 +30,7 @@ token always survives.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -131,3 +131,55 @@ def sample_tokens(logits: jax.Array, temperature: jax.Array,
     noise = jax.vmap(gumbel_row)(keys, steps)
     sampled = jnp.argmax(masked + noise, axis=-1).astype(jnp.int32)
     return jnp.where(temperature > 0, sampled, greedy)
+
+
+# ------------------------------------------- speculative-decode verification
+
+def sample_tokens_q(logits: jax.Array, temperature: jax.Array,
+                    top_k: jax.Array, top_p: jax.Array, keys: jax.Array,
+                    steps: jax.Array) -> jax.Array:
+    """Vectorized multi-position sampler: ``logits (B, Q, V)`` ->
+    ``(B, Q) int32``.
+
+    Position ``i`` of row ``b`` draws with the SAME position-folded key
+    the single-token :func:`sample_tokens` would fold after ``steps[b, i]``
+    context tokens, so each draw is bitwise the token the non-speculative
+    stream would emit at that position — the property that lets exact-match
+    verification below implement lossless rejection sampling.
+    ``temperature``/``top_k``/``top_p``/``keys`` are per-slot ``(B, ...)``
+    and shared by every position of the row; ``steps`` is ``(B, Q)``.
+    """
+    B, Q, V = logits.shape
+    rep = lambda a: jnp.repeat(a, Q, axis=0)
+    flat = sample_tokens(logits.reshape(B * Q, V), rep(temperature),
+                         rep(top_k), rep(top_p), rep(keys),
+                         steps.reshape(B * Q))
+    return flat.reshape(B, Q)
+
+
+def verify_draft_tokens(target_tokens: jax.Array,
+                        drafts: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """In-graph draft acceptance: ``target_tokens (B, K+1)`` (the target
+    model's token at each window position — argmax for greedy rows,
+    :func:`sample_tokens_q` draws for sampled rows) vs ``drafts (B, K)``.
+
+    Returns ``(accepted_tokens (B, K+1), n_emit (B,))``: the step emits
+    ``accepted_tokens[b, :n_emit[b]]`` — every leading draft that matched
+    the target's token, plus the one "bonus" token the target produced at
+    the first divergence (or after the last draft).  ``1 <= n_emit <= K+1``.
+
+    Losslessness: for greedy rows this is trivially the greedy stream.
+    For sampled rows it is rejection sampling against the deterministic
+    (point-mass) drafter through a maximal gumbel coupling: the target's
+    seeded draw X_i at position i plays both the accept test
+    (accept d_i iff X_i == d_i, which happens with probability
+    p_target(d_i) — exactly the min(1, p/q) rule for a point-mass q) and
+    the residual resample (X_i | X_i != d_i is the renormalized residual
+    distribution).  Every emitted token is therefore an exact draw from
+    the target distribution at its position — and, because the draws are
+    position-folded, bitwise the token the non-speculative stream emits.
+    """
+    accept = (target_tokens[:, :-1] == drafts).astype(jnp.int32)   # (B, K)
+    keep = jnp.cumprod(accept, axis=1)          # leading-accept prefix
+    n_emit = keep.sum(axis=1).astype(jnp.int32) + 1
+    return target_tokens.astype(jnp.int32), n_emit

@@ -271,3 +271,59 @@ def test_engine_step_single_fetch(small_engine_factory, monkeypatch):
         out = eng.step()
         assert len(out) == 2
         assert len(fetches) == 1
+
+
+def test_spec_decode_step_single_fetch(small_engine_factory, monkeypatch):
+    """Speculative decoding preserves the single-fetch contract: one
+    device_get per step fetches the whole (B, K+1) accepted window plus
+    per-slot emitted counts and telemetry — K+1 tokens per fetch instead
+    of one."""
+    eng, cfg = small_engine_factory(spec_decode="ngram",
+                                    num_draft_tokens=4, max_seq_len=128)
+    bs = cfg.kv_block_size
+    rng = np.random.RandomState(3)
+    for sid in (1, 2):
+        eng.add_request(Request(seq_id=sid,
+                                prompt=rng.randint(0, cfg.vocab_size, bs),
+                                max_new_tokens=64))
+    fetches = []
+    orig = jax.device_get
+
+    def counting(x):
+        fetches.append(1)
+        return orig(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    import repro.serve.engine as engine_mod
+    monkeypatch.setattr(engine_mod.jax, "device_get", counting)
+    for _ in range(4):
+        fetches.clear()
+        out = eng.step()
+        assert len(out) == 2
+        assert len(fetches) == 1
+
+
+def test_spec_translation_runs_once_per_step(monkeypatch):
+    """The speculative verify step dispatches the hybrid lookup exactly
+    once: the K+1 per-position write slots are GATHERED from the one
+    translation, never re-looked-up."""
+    from repro.serve.spec_decode import make_spec_decode_step
+    cfg = reduced(ARCHS["granite-8b"])
+    dims = model_dims(cfg, tp=1)
+    params = init_params(jax.random.PRNGKey(0), cfg, dims)
+    spec = DecodeSpec(block_size=cfg.kv_block_size, max_blocks_per_seq=4,
+                      slots_per_group=16, n_sets=2, assoc=4)
+    calls = []
+    orig = decode_mod._hybrid_lookup
+
+    def counting(*a, **k):
+        calls.append(1)
+        return orig(*a, **k)
+
+    monkeypatch.setattr(decode_mod, "_hybrid_lookup", counting)
+    step = make_spec_decode_step(cfg, dims, spec, num_draft_tokens=4,
+                                 mesh=None, dtype=jnp.float32)
+    dstate = init_decode_state(cfg, dims, spec, 2, 1)
+    dstate["hist"] = jnp.full((2, 4 * cfg.kv_block_size), -1, jnp.int32)
+    jax.make_jaxpr(step)(params, dstate, jnp.zeros((2,), jnp.int32))
+    assert len(calls) == 1

@@ -178,6 +178,77 @@ class TestPagedAttentionKernel:
         # empty-prefix row: zero weight everywhere, so normalize -> 0
         npt.assert_array_equal(np.asarray(normalize(got[0], got[2]))[0], 0.0)
 
+    @pytest.mark.parametrize("K", [1, 3, 4])
+    @pytest.mark.parametrize("pattern", ["ragged", "boundary",
+                                         "all_rejected", "all_accepted"])
+    def test_verify_shaped_per_query_ctx_vs_ref(self, K, pattern):
+        """Speculative-verify shapes: Q = K+1 queries with PER-QUERY
+        context extents ctx_q[b, i] = pos_b + i + 1 (the sequential
+        causal mask inside one pool read).  Pallas-interpret must match
+        the jnp oracle, and each query column must equal an independent
+        single-extent call — the property that makes spec-on greedy
+        streams token-identical to sequential decode.
+
+        Patterns: ``ragged`` starts rows mid-block, ``boundary`` starts
+        exactly at a block boundary so the window straddles it,
+        ``all_rejected`` re-verifies from the same base every row (the
+        worst case: next step's window repeats the position), and
+        ``all_accepted`` chains two adjacent windows (row 1 starts where
+        row 0's window committed)."""
+        B, H, KV, D, bs, nblk, nslots = 2, 4, 2, 16, 8, 6, 64
+        Q = K + 1
+        ks = jax.random.split(jax.random.PRNGKey(21 + K), 4)
+        q = jax.random.normal(ks[0], (B, Q, H, D))
+        kp = jax.random.normal(ks[1], (nslots, bs, KV, D))
+        vp = jax.random.normal(ks[2], (nslots, bs, KV, D))
+        slots = jax.random.randint(ks[3], (B, nblk), 0, nslots)
+        base = {
+            "ragged": np.array([bs - 2, 3 * bs - 1]),   # straddles blocks
+            "boundary": np.array([bs, 2 * bs]),
+            "all_rejected": np.array([7, 7]),
+            "all_accepted": np.array([5, 5 + Q]),
+        }[pattern]
+        ctx_q = jnp.asarray(base[:, None] + 1 + np.arange(Q)[None, :],
+                            jnp.int32)
+        from repro.kernels.paged_attention.paged_attention import (
+            paged_attention_pallas)
+        got = paged_attention_pallas(q, kp, vp, slots, ctx_q,
+                                     interpret=True)
+        want = paged_attention_ref(q, kp, vp, slots, ctx_q)
+        for a, b in zip(got, want):
+            npt.assert_allclose(np.asarray(a), np.asarray(b),
+                                rtol=2e-5, atol=2e-5)
+        # column i == an independent single-extent call (bitwise, for the
+        # ref path: the verify step's token-identity foundation)
+        for i in range(Q):
+            o1, m1, l1 = paged_attention_ref(q[:, i], kp, vp, slots,
+                                             ctx_q[:, i])
+            npt.assert_array_equal(np.asarray(o1),
+                                   np.asarray(want[0][:, i]))
+            npt.assert_array_equal(np.asarray(m1),
+                                   np.asarray(want[1][:, i]))
+            npt.assert_array_equal(np.asarray(l1),
+                                   np.asarray(want[2][:, i]))
+
+    def test_per_query_ctx_zero_extent_column_drops(self):
+        """A query column with extent 0 yields l == 0 (dropped exactly by
+        any downstream flash-decoding combine)."""
+        B, Q, H, KV, D, bs, nblk, nslots = 1, 3, 4, 2, 16, 8, 4, 32
+        ks = jax.random.split(jax.random.PRNGKey(2), 4)
+        q = jax.random.normal(ks[0], (B, Q, H, D))
+        kp = jax.random.normal(ks[1], (nslots, bs, KV, D))
+        vp = jax.random.normal(ks[2], (nslots, bs, KV, D))
+        slots = jax.random.randint(ks[3], (B, nblk), 0, nslots)
+        ctx_q = jnp.asarray([[0, 5, 9]], jnp.int32)
+        from repro.kernels.paged_attention.paged_attention import (
+            paged_attention_pallas)
+        for fn in (paged_attention_ref, paged_attention_pallas):
+            o, m, l = fn(q, kp, vp, slots, ctx_q)
+            npt.assert_array_equal(np.asarray(l)[:, 0], 0.0)
+            npt.assert_array_equal(
+                np.asarray(normalize(o, l))[:, 0], 0.0)
+            assert (np.asarray(l)[:, 1:] > 0).all()
+
     def test_q1_query_rank_round_trip(self):
         """A (B,H,D) decode query and its (B,1,H,D) chunk form produce
         identical results in BOTH implementations (one code path, two

@@ -266,7 +266,10 @@ def test_stats_attributes_translation_per_request(setup):
     per = st["per_request"]
     assert set(per) == {0, 1}
     for row in per.values():
-        assert set(row) == {"rsw_hits", "flex_walks", "swap_faults"}
+        assert set(row) == {"rsw_hits", "flex_walks", "swap_faults",
+                            "drafted", "accepted"}
+        # spec decode is off: no drafts were ever proposed
+        assert row["drafted"] == row["accepted"] == 0
     # decode telemetry is attributed exhaustively: per-request rows sum
     # to the global counters record_device_stats accumulated
     assert sum(r["rsw_hits"] for r in per.values()) == st["rsw_hits"]
