@@ -68,12 +68,12 @@ def main() -> None:
     params = init_params(jax.random.PRNGKey(0), cfg, dims)
     bs = cfg.kv_block_size
     S = args.prompt_blocks * bs
-    # the spec window writes up to K positions past the committed ctx:
-    # give the sequence that much block headroom
-    spec_pad = args.num_draft_tokens + bs if args.spec_decode else 0
+    # no speculative headroom: a verify window overrunning the last KV
+    # block is re-verified, not committed, so spec-on and spec-off run
+    # the same pool sizing (stats stay apples-to-apples)
     eng = Engine(cfg, params, EngineConfig(
         max_batch=args.max_batch,
-        max_seq_len=S + cfg.frontend_tokens + args.max_new + bs + spec_pad,
+        max_seq_len=S + cfg.frontend_tokens + args.max_new + bs,
         mode=args.mode, prefill_budget=args.prefill_budget,
         auto_release=True, scheduler=args.scheduler,
         prefill_mode=args.prefill_mode,

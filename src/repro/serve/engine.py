@@ -400,6 +400,12 @@ class Engine:
                 if config.num_draft_tokens < 1:
                     raise ValueError("num_draft_tokens must be >= 1, got "
                                      f"{config.num_draft_tokens}")
+                if config.spec_ngram < 1:
+                    # a non-positive n-gram would silently degrade the
+                    # drafter to repeat-current-token (all-rejected
+                    # worst case) — loud error, like num_draft_tokens
+                    raise ValueError("spec_ngram must be >= 1, got "
+                                     f"{config.spec_ngram}")
                 self.spec_K = int(config.num_draft_tokens)
                 self._spec_step = jax.jit(make_spec_decode_step(
                     cfg, self.dims, self.spec, self.spec_K, mesh=None,
@@ -811,16 +817,19 @@ class Engine:
         st.new_tokens.append(nxt)
         self._maybe_finish(st, nxt)
 
+    def _finish(self, st: RequestState, reason: str) -> None:
+        st.done = True
+        st.finish_reason = reason
+        if self.auto_release and st.request.seq_id in self._slot_of:
+            self.release(st.request.seq_id)
+
     def _maybe_finish(self, st: RequestState, nxt: int) -> None:
         if st.done:
             return
         req = st.request
         hit_eos = req.eos_token is not None and nxt == req.eos_token
         if hit_eos or len(st.generated) >= req.max_new_tokens:
-            st.done = True
-            st.finish_reason = "stop" if hit_eos else "length"
-            if self.auto_release and req.seq_id in self._slot_of:
-                self.release(req.seq_id)
+            self._finish(st, "stop" if hit_eos else "length")
 
     # ------------------------------------------------------------- serving
     def _sync_translation(self, full: bool = False) -> None:
@@ -1054,9 +1063,13 @@ class Engine:
             # from those query positions are NOT exact — never commit
             # them (the truncation rewind below restores ctx).  Callers
             # need no special max_seq_len sizing; overrun costs
-            # re-verification, not correctness.
+            # re-verification, not correctness.  At cap == 0 even the
+            # fed token's K/V write was masked, so NOTHING within the
+            # window can ever become exact: the row is out of KV
+            # capacity and finishes with a "length" stop.
             cap = self.spec.max_blocks_per_seq * bs - pos
-            n = min(int(host["n_emit"][slot]), max(cap, 1))
+            n_emit = int(host["n_emit"][slot])
+            n = min(n_emit, cap) if cap > 0 else 0
             toks = host["next"][slot]
             committed = 0
             for i in range(n):
@@ -1073,13 +1086,18 @@ class Engine:
             # the target's own).  Rows sum exactly to the globals by
             # construction (cross-checked in tests).
             st.drafted += K
-            st.accepted += committed - 1
+            st.accepted += max(committed - 1, 0)
             self._spec_drafted += K
-            self._spec_accepted += committed - 1
+            self._spec_accepted += max(committed - 1, 0)
+            if cap <= 0 and not st.done:
+                self._finish(st, "length")
             if sid not in self._slot_of:
                 continue    # finished AND auto-released: state already reset
             new_ctx = pos + committed
-            if committed < n:
+            # rewind whenever the host committed fewer tokens than the
+            # device advanced IN-GRAPH (n_emit) — eos/max_new truncation
+            # AND the capacity clamp above both leave ctx ahead otherwise
+            if committed < n_emit:
                 rewinds[slot] = new_ctx
                 self._ctx_host[slot] = new_ctx
             if self._n_attn_layers:
@@ -1124,10 +1142,15 @@ class Engine:
         sequence (``auto_release=False``), so iterating would spin
         forever.  Release sequences or enable ``auto_release``."""
         if self.has_unfinished():
-            before = (dict(self._prefilling), len(self.waiting))
+            # slot count included: a zero-token finish (capacity stop)
+            # that auto-releases its slot IS progress — the freed slot
+            # admits a queued request on the next step
+            before = (dict(self._prefilling), len(self.waiting),
+                      len(self._slot_of))
             out = self.step()
             if (not out and self.waiting
-                    and before == (self._prefilling, len(self.waiting))):
+                    and before == (self._prefilling, len(self.waiting),
+                                   len(self._slot_of))):
                 raise PoolExhausted(
                     f"{len(self.waiting)} queued request(s) cannot be "
                     "admitted and nothing is decoding: release finished "

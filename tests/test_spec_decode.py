@@ -378,6 +378,83 @@ def test_window_overrunning_seq_capacity_stays_lossless(setup):
     assert ctx >= len(prompt)
 
 
+def test_kv_capacity_exhaustion_stops_with_length(setup):
+    """A row whose ``max_new_tokens`` overruns its KV block table must
+    commit only exact tokens and then STOP: the stream equals a spec-off
+    run sized to the capacity edge, the device ``ctx_len`` and the host
+    mirror agree after every step (the clamp-without-finish rewind), and
+    the row finishes with a "length" stop at exactly ``nblk*bs``
+    committed positions instead of committing range-masked (inexact)
+    tokens forever."""
+    cfg, params = setup
+    bs = cfg.kv_block_size
+    rng = np.random.RandomState(21)
+    prompt = rng.randint(0, cfg.vocab_size, 2 * bs)
+    seq_len = 4 * bs              # capacity: 2*bs generated tokens
+
+    # the longest exact stream: the final token is emitted from query
+    # position nblk*bs - 1 (its K/V write is in range) and never needs
+    # a write of its own — capacity - prompt + 1 tokens
+    eng_off = Engine(cfg, params, EngineConfig(max_batch=1,
+                                               max_seq_len=seq_len))
+    r_off = Request(seq_id=0, prompt=prompt, max_new_tokens=2 * bs + 1)
+    eng_off.submit(r_off)
+    _drain(eng_off)
+
+    for K in (3, 4, 7):
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=1, max_seq_len=seq_len, spec_decode="ngram",
+            num_draft_tokens=K))
+        r = Request(seq_id=0, prompt=prompt, max_new_tokens=100)
+        eng.submit(r)
+        steps = 0
+        while eng.has_unfinished():
+            eng.step()
+            steps += 1
+            assert steps < 100
+            slot = eng._slot_of[0]
+            assert int(np.asarray(eng.dstate["ctx_len"])[slot]) \
+                == int(eng._ctx_host[slot]), (K, steps)
+        eng.manager.check_invariants()
+        st = eng._states[0]
+        assert st.finish_reason == "length"
+        cap_tokens = eng.spec.max_blocks_per_seq * bs - len(prompt) + 1
+        assert len(r.generated) == cap_tokens
+        assert list(r.generated) == list(r_off.generated), K
+        # invariant discipline survives the zero-commit final window
+        stats = eng.stats()
+        per = stats["per_request"][0]
+        assert per["drafted"] == stats["spec_drafted"]
+        assert per["accepted"] == stats["spec_accepted"]
+        assert 0 <= per["accepted"] <= per["drafted"]
+
+
+def test_capacity_stop_frees_slot_for_waiting_request(setup):
+    """A zero-token capacity finish that auto-releases its slot counts
+    as progress: ``poll()`` must admit the queued request on the next
+    step instead of raising PoolExhausted."""
+    cfg, params = setup
+    bs = cfg.kv_block_size
+    rng = np.random.RandomState(5)
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=1, max_seq_len=4 * bs, spec_decode="ngram",
+        num_draft_tokens=4, auto_release=True))
+    eng.submit(Request(seq_id=0,
+                       prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                       max_new_tokens=100))     # overruns KV capacity
+    r1 = Request(seq_id=1, prompt=rng.randint(0, cfg.vocab_size, bs),
+                 max_new_tokens=4)
+    eng.submit(r1)
+    outs, polls = [], 0
+    while eng.has_unfinished():
+        outs.extend(eng.poll())
+        polls += 1
+        assert polls < 200
+    fins = {o.seq_id: o.finish_reason for o in outs if o.finished}
+    assert fins == {0: "length", 1: "length"}
+    assert len(r1.generated) == 4
+
+
 def test_spec_counters_sum_to_global_and_bound(setup):
     cfg, params = setup
     bs = cfg.kv_block_size
@@ -472,6 +549,18 @@ def test_spec_off_state_is_unchanged(setup):
                                            max_seq_len=64))
     assert "hist" not in eng.dstate
     assert eng.spec_K == 0
+
+
+def test_spec_config_validation(setup):
+    """Non-positive K or n-gram order raise loudly at construction —
+    spec_ngram < 1 would otherwise silently degrade the drafter to
+    repeat-current-token (the all-rejected worst case)."""
+    cfg, params = setup
+    for kw in (dict(num_draft_tokens=0), dict(spec_ngram=0),
+               dict(spec_ngram=-1)):
+        with pytest.raises(ValueError):
+            Engine(cfg, params, EngineConfig(
+                max_batch=1, max_seq_len=64, spec_decode="ngram", **kw))
 
 
 def test_slot_recycling_clears_history(setup):
