@@ -48,6 +48,9 @@ KEY_METRICS = {
     "spec_decode": ["tokens_per_s_speedup_spec_on_over_off",
                     "step_latency_ratio_spec_on_over_off",
                     "acceptance_rate"],
+    "overload": ["goodput_ratio_preempt_over_fail",
+                 "ttft_p99_ratio_preempt_over_fail",
+                 "preemptions_per_request"],
 }
 
 

@@ -75,12 +75,16 @@ def main() -> None:
         print(f"  seq {sid}: {list(out.token_ids)} ({out.finish_reason})")
     st = eng.stats()
     total = st.get("rsw_hits", 0) + st.get("flex_walks", 0)
+    mapped = sum(1 for i in eng.manager.blocks.values() if i.slot >= 0)
     print(f"\ntranslation stats: rsw_hits={st.get('rsw_hits', 0)} "
           f"({100 * st.get('rsw_hits', 0) / max(total, 1):.1f}%) "
           f"flex_walks={st.get('flex_walks', 0)} "
           f"shared_blocks={st.get('shared_blocks', 0)} "
           f"migrations={st.get('migrations_rest_to_flex', 0) + st.get('migrations_flex_to_rest', 0)} "
-          f"swaps={st.get('swap_out', 0)}")
+          f"swap_out={st.get('swap_out', 0)} "
+          f"swap_in={st.get('swap_in', 0)} "
+          f"faults={st.get('swap_in_fault', 0)} "
+          f"occupancy={mapped}/{eng.hybrid_cfg.total_slots}")
     for sid, row in sorted(st["per_request"].items()):
         print(f"  seq {sid}: rsw_hits={row['rsw_hits']} "
               f"flex_walks={row['flex_walks']} "
@@ -113,6 +117,31 @@ def main() -> None:
     assert list(spec.finished[0].generated) \
         == list(results[0].token_ids), "lossless contract violated"
     print("spec-on stream identical to spec-off: OK")
+
+    # ---- graceful degradation under overload (ISSUE 6) ----------------
+    # A pool sized for ~half the submitted work: instead of failing,
+    # the engine preempts victim sequences to the host KV tier (one
+    # batched swap-out of their blocks + rows) and resumes them through
+    # the scheduler queue.  Streams stay bit-identical to an uncontended
+    # run — the tests pin that; this demo shows the ladder working.
+    print("\n--- overload: tiered KV host-offload (pool_headroom=0.5) ---")
+    tight = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_seq_len=8 * bs, pool_headroom=0.5,
+        auto_release=True))
+    for i in range(8):
+        tight.submit(Request(
+            seq_id=i, prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+            max_new_tokens=20))
+    done = sum(1 for _ in tight.stream())
+    ov = tight.stats()["overload"]
+    print(f"8 requests on a {tight.hybrid_cfg.total_slots}-block pool: "
+          f"all finished in {tight.step_count} steps")
+    print(f"preempted={ov['preempted_seqs']} resumed={ov['resumed_seqs']} "
+          f"swap_out={ov['swap_bytes_out'] / 2**10:.0f}KiB "
+          f"swap_in={ov['swap_bytes_in'] / 2**10:.0f}KiB "
+          f"still_on_host_tier={ov['host_tier_seqs']}")
+    tight.manager.check_invariants()
+    print("pool invariants OK after overload drain")
 
 
 if __name__ == "__main__":

@@ -6,7 +6,8 @@ from .flex_table import FlexTable, RadixTable, RadixBuilder, init_flex_table
 from .translate import (TranslationState, TranslateResult, translate,
                         translate_radix, translate_ech, translate_pom)
 from .policies import SRRIP, CostTracker, CostTrackerConfig
-from .kv_manager import HybridKVManager, BlockInfo, PoolExhausted, REST, FLEX, SWAP
+from .kv_manager import (HybridKVManager, BlockInfo, PoolExhausted,
+                         AllocLedger, REST, FLEX, SWAP)
 from .ech import ElasticCuckooTable, ECHState
 from .pom_tlb import POMTLB, POMTLBState
 
@@ -18,6 +19,7 @@ __all__ = [
     "TranslationState", "TranslateResult", "translate",
     "translate_radix", "translate_ech", "translate_pom",
     "SRRIP", "CostTracker", "CostTrackerConfig",
-    "HybridKVManager", "BlockInfo", "PoolExhausted", "REST", "FLEX", "SWAP",
+    "HybridKVManager", "BlockInfo", "PoolExhausted", "AllocLedger",
+    "REST", "FLEX", "SWAP",
     "ElasticCuckooTable", "ECHState", "POMTLB", "POMTLBState",
 ]

@@ -10,6 +10,13 @@ Two device-side representations of the flexible mapping:
   page-table walk (PTW) cost structure for the benchmarks: the serial
   dependency chain is real in the lowered HLO (each gather's index depends
   on the previous gather's result).
+
+Swap consistency (PR 6): a swapped-out (host-tier) block is -1
+(unmapped) in the flat table — the flex slot is freed at swap-out and
+re-acquired at resume/fault time, so a stale slot can never be read
+through the table while its data is on the host.  The SWAP bookkeeping
+(which vpns are restorable, and their write bits) lives host-side in
+``kv_manager.py``; see DESIGN.md §tiered-KV-and-overload.
 """
 from __future__ import annotations
 

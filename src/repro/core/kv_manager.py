@@ -52,7 +52,72 @@ class BlockInfo:
 
 
 class PoolExhausted(RuntimeError):
-    pass
+    """Pool/slot exhaustion that cannot be served.
+
+    ``diag`` carries structured occupancy diagnostics (the engine fills
+    them in: pool size, mapped blocks, queued / live /
+    finished-unreleased / preempted request counts) so operators see WHY
+    admission failed, not just that it did.  The key=value pairs are also
+    appended to the message for plain-string consumers."""
+
+    def __init__(self, message: str = "pool exhausted", **diag):
+        if diag:
+            message = (message + " ["
+                       + " ".join(f"{k}={v}"
+                                  for k, v in sorted(diag.items())) + "]")
+        super().__init__(message)
+        self.diag = diag
+
+
+class AllocLedger:
+    """Exact dry-run of a sequence of ``allocate_block`` calls.
+
+    Success of a batch of new-vpn allocations is order-independent under
+    the manager's policy: each new vpn consumes an empty way of its own
+    set when one exists and exactly one FlexSeg slot otherwise (an
+    evict-migrate moves the SRRIP victim into the flex slot the new
+    block would have taken — same net count; with ``alloc_evicts=False``
+    the block lands in the flex slot directly).  A snapshot of per-set
+    empty-way counts plus the flex free-list length therefore predicts
+    allocate_block outcomes exactly, letting the serving engine decide
+    preemption BEFORE mutating any table — a failed real allocation
+    would leave a SWAP-state BlockInfo (and a dropped KV write) behind.
+
+    ``reserve`` is all-or-nothing and updates the snapshot on success,
+    so one ledger can gate a whole admission round incrementally.  In
+    ``restrictive_only`` mode allocation never "fails" (a set conflict
+    swaps the block, Fig. 9 semantics), so every reserve succeeds.
+    """
+
+    def __init__(self, mgr: "HybridKVManager"):
+        self._mode = mgr.cfg.mode
+        self._hash = mgr.hash
+        self._num_sets = mgr.cfg.num_sets
+        self._flex = len(mgr.flex_free)
+        self._empty = ((mgr.tar == 0).sum(axis=1).astype(np.int64)
+                       if self._mode != "flexible_only" else None)
+
+    def reserve(self, vpns) -> bool:
+        """Would allocating every (currently unmapped) vpn succeed?
+        All-or-nothing: on True the capacity is deducted from the
+        snapshot; on False the snapshot is unchanged."""
+        if self._mode == "restrictive_only":
+            return True
+        flex = self._flex
+        empty = None if self._empty is None else self._empty.copy()
+        for vpn in vpns:
+            if empty is not None:
+                st = int(self._hash(int(vpn), self._num_sets))
+                if empty[st] > 0:
+                    empty[st] -= 1
+                    continue
+            if flex <= 0:
+                return False
+            flex -= 1
+        self._flex = flex
+        if empty is not None:
+            self._empty = empty
+        return True
 
 
 class HybridKVManager:
@@ -115,6 +180,88 @@ class HybridKVManager:
         del self.seq_lengths[s]
         self._free_seq_slots.append(s)
 
+    # ------------------------------------- whole-sequence preempt / resume
+    def preempt(self, seq_id: int) -> List[Tuple[int, bool]]:
+        """Swap a whole live sequence out to the host tier (ISSUE 6).
+
+        Extends the per-block SWAP state to sequence granularity: every
+        mapped block is released through the shared :meth:`_release` path
+        (TAR/SF clears, flex-table unmaps, dirty marks), each counted as
+        a ``swap_out`` with reason ``preempt``.  Shared-prefix blocks
+        only drop THIS sequence's reference — the refcount decrement
+        leaves the co-owner's physical slot untouched, so a sharer is
+        never swapped out from under its co-owner; the preempted
+        sequence gets a private copy of the prefix on resume.  The
+        sequence slot is freed too, so resume may land on a different
+        slot (the engine re-uploads the saved KV against the new
+        mapping).
+
+        Returns ``[(block_idx, writable)]`` for every block that was
+        mapped (slot >= 0) at preemption — the caller must have gathered
+        those slots' device data BEFORE calling this.  Blocks already in
+        per-block SWAP state hold no pool data and are simply dropped.
+        """
+        if self.cfg.mode == "restrictive_only":
+            raise ValueError(
+                "preempt/resume needs a flexible segment to keep swapped "
+                "sequences restorable (hybrid or flexible_only mode)")
+        s = self.seq_slot(seq_id)
+        saved: List[Tuple[int, bool]] = []
+        for b in range(self.cfg.max_blocks_per_seq):
+            info = self.blocks.get(self.cfg.vpn(s, b))
+            if info is not None and info.slot >= 0:
+                saved.append((b, info.writable))
+        self.free_sequence(seq_id)
+        self._count_swap_out("preempt", len(saved))
+        self.stats["preempt_out"] += 1
+        return saved
+
+    def resume(self, seq_id: int, saved: List[Tuple[int, bool]]
+               ) -> Dict[int, int]:
+        """Re-admit a preempted sequence: a fresh sequence slot and fresh
+        physical slots for every saved block, preserving per-block
+        writability.  Returns ``{block_idx: new_slot}`` so the caller can
+        scatter the host-tier KV back.  Capacity must be checked FIRST
+        via :meth:`alloc_ledger` — this raises ``PoolExhausted`` if a
+        saved block cannot be mapped, leaving the partial registration
+        for the caller to tear down."""
+        self.register_sequence(seq_id)
+        out: Dict[int, int] = {}
+        for b, writable in saved:
+            info = self.allocate_block(seq_id, b, writable,
+                                       count_fault=False)
+            if info.slot < 0:
+                raise PoolExhausted(
+                    f"resume of sequence {seq_id} could not map block {b}")
+            out[b] = info.slot
+        self._count_swap_in("resume", len(saved))
+        self.stats["preempt_in"] += 1
+        return out
+
+    def alloc_ledger(self) -> AllocLedger:
+        """Snapshot an :class:`AllocLedger` for exact capacity dry-runs."""
+        return AllocLedger(self)
+
+    # ----------------- swap accounting: ONE mutation point per direction
+    def _count_swap_out(self, reason: str, n: int = 1) -> None:
+        """Sole mutation point for ``stats["swap_out"]`` (Fig. 9).  The
+        per-reason breakdown (``swap_out_conflict`` — restrictive-only
+        set conflict, ``swap_out_pool`` — flexible segment exhausted,
+        ``swap_out_evict`` — RestSeg eviction with nowhere to migrate,
+        ``swap_out_preempt`` — whole-sequence host-tier offload) always
+        sums to the total, cross-checked by :meth:`check_invariants`, so
+        the paper-figure counters and the overload/preemption counters
+        cannot drift apart."""
+        self.stats["swap_out"] += n
+        self.stats[f"swap_out_{reason}"] += n
+
+    def _count_swap_in(self, reason: str, n: int = 1) -> None:
+        """Sole mutation point for ``stats["swap_in"]`` (reasons:
+        ``fault`` — a per-block swap_in on access, ``resume`` — a
+        host-tier sequence restore)."""
+        self.stats["swap_in"] += n
+        self.stats[f"swap_in_{reason}"] += n
+
     def free_block(self, seq_id: int, block_idx: int) -> bool:
         """Deallocate ONE block of a live sequence (speculative decode:
         a rejected draft tail crossed a block boundary, so the block it
@@ -151,7 +298,7 @@ class HybridKVManager:
                 return info
             if self.cfg.mode == "restrictive_only":
                 # no flexible fallback: the conflicting block goes to swap
-                self.stats["swap_out"] += 1
+                self._count_swap_out("conflict")
                 info = BlockInfo(vpn=vpn, seg=SWAP, slot=-1, writable=writable)
                 self.blocks[vpn] = info
                 return info
@@ -193,7 +340,7 @@ class HybridKVManager:
 
     def _flex_alloc(self, vpn: int, writable: bool) -> BlockInfo:
         if not self.flex_free:
-            self.stats["swap_out"] += 1
+            self._count_swap_out("pool")
             info = BlockInfo(vpn=vpn, seg=SWAP, slot=-1, writable=writable)
             self.blocks[vpn] = info
             return info
@@ -223,7 +370,7 @@ class HybridKVManager:
         self.slot_owner[old_slot] = -1
         self.stats["rest_evictions"] += 1
         if to_swap or not self.flex_free:
-            self.stats["swap_out"] += 1
+            self._count_swap_out("evict")
             info.seg, info.slot = SWAP, -1
             return
         new_slot = self.flex_free.pop()
@@ -401,7 +548,7 @@ class HybridKVManager:
         info = self.blocks.get(vpn)
         if info is None or info.seg != SWAP:
             raise ValueError(f"vpn {vpn} not in swap")
-        self.stats["swap_in"] += 1
+        self._count_swap_in("fault")
         del self.blocks[vpn]
         return self.allocate_block(seq_id, block_idx, info.writable,
                                    count_fault=False)
@@ -486,3 +633,17 @@ class HybridKVManager:
         rc = {s: c for s, c in self.slot_refcount.items() if c != 0}
         assert rc == dict(occ), \
             f"slot_refcount {rc} != flex-table occupancy {dict(occ)}"
+        # every mapped block must belong to a REGISTERED sequence: a
+        # preempted/freed sequence leaving blocks behind is a pool leak
+        for vpn in self.blocks:
+            assert vpn // self.cfg.max_blocks_per_seq in self.seq_lengths, \
+                f"block vpn {vpn} belongs to an unregistered sequence"
+        # swap accounting: the totals are mutated ONLY through
+        # _count_swap_out/_count_swap_in, so they must equal their
+        # per-reason breakdowns exactly (Fig. 9 vs preemption counters)
+        for d in ("swap_out", "swap_in"):
+            parts = sum(v for k, v in self.stats.items()
+                        if k.startswith(d + "_"))
+            assert self.stats.get(d, 0) == parts, \
+                (f"stats[{d!r}]={self.stats.get(d, 0)} != sum of "
+                 f"per-reason counters {parts}")

@@ -9,6 +9,13 @@ Paper mapping (Utopia, Kanellopoulos et al.):
 Slot numbering is global over the pool: slots ``[0, rest_slots)`` belong to
 the RestSeg (slot = set * assoc + way), slots ``[rest_slots, total_slots)``
 belong to the FlexSeg.
+
+Swap consistency (PR 6): a third logical segment, SWAP, holds mappings
+whose data lives on the host tier.  A SWAP mapping owns NO slot — the
+slot was released at swap-out — so segment geometry never counts it
+against RestSeg/FlexSeg occupancy; it only reserves the vpn so a
+resume/fault can re-materialise through the normal allocation path.
+See DESIGN.md §tiered-KV-and-overload.
 """
 from __future__ import annotations
 

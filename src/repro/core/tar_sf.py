@@ -13,6 +13,13 @@ Paper §5.2 (RestSeg Walk):
   SF[set] == 0  -> miss without touching TAR   (set filtering)
   else          -> compare vpn+1 against the M way tags (tag matching)
   slot  = set * assoc + way                     (restrictive mapping)
+
+Swap consistency (PR 6): a swapped-out (host-tier) block is NEVER
+tagged here — swap-out clears its TAR way and decrements SF, so a
+RestSeg walk for it misses cleanly and the fault path re-allocates.
+The host allocator's numpy mirror and these device arrays stay in
+lockstep through the dirty-delta sync; ``check_invariants`` asserts
+the mirror after every preempt/resume in tests.
 """
 from __future__ import annotations
 

@@ -1,1 +1,3 @@
-from .fault import (FaultInjector, InjectedFault, StragglerMonitor, ResilientLoop, LoopReport)
+from .fault import (FaultInjector, ServeFaultInjector, InjectedFault,
+                    InjectedStepFault, InjectedAllocFault,
+                    StragglerMonitor, ResilientLoop, LoopReport)

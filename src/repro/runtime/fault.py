@@ -7,28 +7,58 @@ data replay, straggler detection via per-host step-time EMA — is the real
 algorithm and is unit-tested.
 
 * ``FaultInjector``      — deterministic failure schedule for tests.
+* ``ServeFaultInjector`` — chaos schedule for the SERVING engine: forced
+                           allocation failures and preemptions at
+                           adversarial step points (ISSUE 6).
 * ``ResilientLoop``      — train driver: periodic async checkpoints,
                            restore-and-replay on failure (data pipeline is
                            f(step), so replay is exact), bounded retries.
 * ``StragglerMonitor``   — per-host EMA of step times; hosts slower than
                            ``threshold`` x median are flagged for
                            re-replication (the scheduler callback decides).
+
+Train-loop and serve-loop injection share ONE fault vocabulary, the
+``InjectedFault`` taxonomy below: a *step* fault kills a whole unit of
+work in flight (the train loop restarts from a checkpoint), an *alloc*
+fault denies a resource (the serve engine degrades by preempting a
+victim to its host KV tier — it never unwinds a dispatch).
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Callable, Dict, List, Optional
+from collections import defaultdict
+from typing import Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
 
 class InjectedFault(RuntimeError):
-    pass
+    """Base of the shared train/serve fault taxonomy.
+
+    * :class:`InjectedStepFault`  — a step/host died mid-flight; the
+      recovery unit is restart-and-replay (``ResilientLoop``).
+    * :class:`InjectedAllocFault` — a resource allocation was denied;
+      the recovery unit is graceful degradation (the serve engine
+      consults :class:`ServeFaultInjector` as a capacity check and
+      preempts instead of catching an exception — this class exists so
+      tests and logs can name the failure mode).
+    """
+    kind = "generic"
+
+
+class InjectedStepFault(InjectedFault):
+    kind = "step"
+
+
+class InjectedAllocFault(InjectedFault):
+    kind = "alloc"
 
 
 class FaultInjector:
-    """Raises InjectedFault at the scheduled steps (each fires once)."""
+    """Raises :class:`InjectedStepFault` at the scheduled steps (each
+    fires once).  Serve-path chaos uses :class:`ServeFaultInjector`
+    instead — the engine polls for denials rather than catching."""
 
     def __init__(self, fail_at_steps=()):
         self.fail_at = set(fail_at_steps)
@@ -37,10 +67,101 @@ class FaultInjector:
     def maybe_fail(self, step: int) -> None:
         if step in self.fail_at and step not in self.fired:
             self.fired.add(step)
-            raise InjectedFault(f"injected failure at step {step}")
+            raise InjectedStepFault(f"injected failure at step {step}")
+
+
+class ServeFaultInjector:
+    """Chaos schedule for the serving engine (ISSUE 6).
+
+    Unlike :class:`FaultInjector`, the engine CONSULTS this injector
+    instead of catching exceptions — an allocation denial is a normal
+    capacity-check outcome the engine degrades through (preempt a victim
+    to the host KV tier), never an unwound dispatch.
+
+    * ``alloc_fail_at``: iterable of ``(step, point)`` — make ONE
+      capacity check at that engine step report failure.  Points are the
+      adversarial moments of the step loop: ``"admit"`` (a prompt
+      chunk's block reservation — hits mid-chunk-prefill prompts),
+      ``"decode"`` (a decode/spec-window boundary block — hits
+      mid-spec-window), ``"resume"`` (a host-tier restore's capacity
+      gate).
+    * ``preempt_at``: iterable of ``(step, phase, target)`` — force a
+      preemption at one of the step's two safe points: phase ``"pre"``
+      (before admission — a mid-chunk-prefill victim is torn out between
+      its chunks) or ``"post"`` (after the commit — between a
+      speculative window's verify/commit and the next dispatch).
+      ``target`` is a seq_id or ``"auto"`` (the engine's victim policy
+      picks).  Each entry fires once.
+    * ``seed`` + ``alloc_fail_rate``/``preempt_rate``: random chaos from
+      a seeded ``np.random.RandomState`` — a given (seed, workload) run
+      is exactly reproducible.
+
+    ``log`` records every fired event as a tuple (``("alloc", step,
+    point)`` / ``("preempt", step, phase, target)``) for test
+    assertions; ``faults()`` summarizes counts by kind, using the
+    :class:`InjectedFault` taxonomy names.
+    """
+
+    def __init__(self, alloc_fail_at=(), preempt_at=(),
+                 seed: Optional[int] = None,
+                 alloc_fail_rate: float = 0.0,
+                 preempt_rate: float = 0.0):
+        self._alloc = {(int(s), str(p)) for s, p in alloc_fail_at}
+        self._forced: Dict[Tuple[int, str], List] = defaultdict(list)
+        for step, phase, target in preempt_at:
+            if phase not in ("pre", "post"):
+                raise ValueError(f"unknown preempt phase {phase!r} "
+                                 "(expected 'pre' or 'post')")
+            self._forced[(int(step), str(phase))].append(target)
+        self._rng = (np.random.RandomState(seed)
+                     if seed is not None else None)
+        self.alloc_fail_rate = float(alloc_fail_rate)
+        self.preempt_rate = float(preempt_rate)
+        self.log: List[tuple] = []
+
+    def alloc_unavailable(self, step: int, point: str) -> bool:
+        """Should this capacity check be forced to fail?"""
+        key = (int(step), str(point))
+        if key in self._alloc:
+            self._alloc.discard(key)
+            self.log.append(("alloc", key[0], key[1]))
+            return True
+        if (self._rng is not None and self.alloc_fail_rate > 0
+                and self._rng.random_sample() < self.alloc_fail_rate):
+            self.log.append(("alloc", int(step), str(point)))
+            return True
+        return False
+
+    def forced_preempts(self, step: int, phase: str) -> List:
+        """Sequences to forcibly preempt at this (step, phase)."""
+        out = list(self._forced.pop((int(step), str(phase)), ()))
+        if (self._rng is not None and self.preempt_rate > 0
+                and self._rng.random_sample() < self.preempt_rate):
+            out.append("auto")
+        for t in out:
+            self.log.append(("preempt", int(step), str(phase), t))
+        return out
+
+    def faults(self) -> Dict[str, int]:
+        """Fired-event counts keyed by taxonomy kind."""
+        out: Dict[str, int] = {InjectedAllocFault.kind: 0, "preempt": 0}
+        for ev in self.log:
+            out[InjectedAllocFault.kind
+                if ev[0] == "alloc" else "preempt"] += 1
+        return out
 
 
 class StragglerMonitor:
+    """Per-host EMA of step times; hosts slower than ``threshold`` x the
+    median are flagged for re-replication.
+
+    Serving analogue: the engine's overload ladder (admit → chunk →
+    preempt → reject, DESIGN.md §tiered-KV-and-overload) plays the same
+    role for KV capacity that straggler re-replication plays for
+    compute — both are driven by the shared :class:`InjectedFault`
+    taxonomy in tests (:class:`ServeFaultInjector` on the serve path,
+    :class:`FaultInjector` here)."""
+
     def __init__(self, n_hosts: int, alpha: float = 0.3,
                  threshold: float = 1.5):
         self.ema = np.zeros(n_hosts)
@@ -75,7 +196,14 @@ class LoopReport:
 
 
 class ResilientLoop:
-    """Checkpointed train loop with restart-and-replay semantics."""
+    """Checkpointed train loop with restart-and-replay semantics.
+
+    Recovers from :class:`InjectedStepFault` (a whole step died); its
+    serving counterpart is ``Engine.preempt_request`` /
+    host-tier resume, which recovers from *allocation* denials
+    (:class:`InjectedAllocFault` in the shared taxonomy) by swapping a
+    victim sequence out instead of restarting anything — see
+    :class:`ServeFaultInjector` for how tests force both."""
 
     def __init__(self, ckpt_manager, data, train_step: Callable,
                  ckpt_every: int = 10, max_restarts: int = 3,

@@ -50,7 +50,23 @@ fronted by a request-centric API:
 * prefix sharing between requests with a common prompt prefix (FlexSeg
   refcounts — the paper's inter-process page sharing);
 * eviction/swap: pool exhaustion surfaces as swap events exactly as in
-  the restrictive-only experiment (Fig. 9).
+  the restrictive-only experiment (Fig. 9);
+* overload (ISSUE 6, DESIGN.md §tiered-KV-and-overload): when a KV
+  block cannot be allocated the engine walks the degradation ladder —
+  admit less, chunk, PREEMPT a victim sequence to the host KV tier
+  (``preempt_request``: one batched gather of its blocks + recurrent /
+  cross / history rows), and only rejects requests that can never run.
+  Preempted requests re-enter the scheduler queue with their original
+  arrival and resume bit-identically (KV restored bitwise, sampling
+  keys re-derived from (seed, seq_id) and folded with absolute
+  position); a ``runtime.fault.ServeFaultInjector`` can force
+  allocation failures and preemptions at the step's safe points for
+  chaos testing.
+
+Both steady-state contracts survive preemption: translation still
+happens once inside the dispatch, and a steady step still performs ONE
+``device_get`` — ``preempt_request`` adds its own batched gather only
+when a victim is actually swapped, never on the untriggered path.
 
 Hot-path contract (DESIGN.md §translate-once): the steady-state
 ``step()`` performs a BOUNDED number of host<->device transfers — at
@@ -162,6 +178,18 @@ class EngineConfig:
     spec_decode: Any = None
     num_draft_tokens: int = 4
     spec_ngram: int = 2
+    # overload behaviour when a KV block cannot be allocated (ISSUE 6):
+    # "preempt" (default) swaps a victim sequence out to the host tier
+    # and re-admits it through the scheduler queue — poll()/stream()
+    # make progress instead of raising; "fail" is the fail-fast
+    # baseline: admission defers until the request's full footprint
+    # fits and a decode-time miss raises PoolExhausted (it also fixes
+    # the pre-overload silent corruption where a SWAP'd current block
+    # dropped its KV write behind a masked w_valid)
+    overload_policy: str = "preempt"
+    # a runtime.fault.ServeFaultInjector (or None): forced allocation
+    # failures and preemptions for the chaos suite
+    fault_injector: Any = None
 
 
 class ChunkRecord(NamedTuple):
@@ -239,6 +267,32 @@ class RequestState:
     # spec_drafted / spec_accepted counters)
     drafted: int = 0
     accepted: int = 0
+    # overload bookkeeping: step of the latest commit (the LRU key for
+    # victim selection) and how often this request was preempted (the
+    # aggregate is surfaced via stats()["overload"])
+    last_step: int = 0
+    preempts: int = 0
+
+
+@dataclasses.dataclass
+class _HostTierSeq:
+    """One preempted sequence parked in host memory (the KV tier).
+
+    Everything the sequence needs to continue bit-identically: the pool
+    blocks it had mapped (``kv`` stacked as (2=k/v, L_attn, n_blocks,
+    block, KV, hd) in pool dtype — a bitwise round-trip), its per-slot
+    recurrent/cross-attention rows, the spec-decode history row, the
+    committed context length and — for a mid-prefill victim — how many
+    prompt tokens were installed.  Sampling state needs no save: per-slot
+    PRNG keys derive from (seed, seq_id) and fold the absolute position,
+    so they are re-scattered on resume (PR-3 invariant)."""
+    seq_id: int
+    ctx: int
+    prefill_progress: Optional[int]     # tokens installed, None = done
+    blocks: List[Tuple[int, bool]]      # (block_idx, writable) at preempt
+    kv: Optional[np.ndarray]
+    rows: Dict[str, np.ndarray]         # ssm/conv/cross_k/cross_v/hist
+    nbytes: int
 
 
 @dataclasses.dataclass(frozen=True)
@@ -351,6 +405,20 @@ class Engine:
                 f"the KV block size {bs}: no prompt chunk could ever be "
                 "admitted")
         self.auto_release = config.auto_release
+        if config.overload_policy not in ("preempt", "fail"):
+            raise ValueError(
+                f"unknown overload_policy {config.overload_policy!r} "
+                "(expected 'preempt' or 'fail')")
+        self.overload_policy = config.overload_policy
+        self._injector = config.fault_injector
+        # host KV tier: preempted sequences parked off-device (ISSUE 6)
+        self._preempted: Dict[int, _HostTierSeq] = {}
+        self._swap_bytes_out = 0
+        self._swap_bytes_in = 0
+        # monotone count of preempt/resume events: poll()'s no-progress
+        # detector treats any of them as progress (a step that only
+        # rearranges residency is not a stuck step)
+        self._progress_events = 0
         self.scheduler: Scheduler = make_scheduler(config.scheduler)
         # a scheduler instance is MUTABLE state: sharing one between two
         # engines (e.g. via a reused EngineConfig holding an instance)
@@ -531,15 +599,37 @@ class Engine:
         if budget is None:
             budget = sum(len(np.asarray(r.prompt)) for r in self.waiting)
         chunks: List[Tuple[Request, int, int, bool, bool]] = []
+        # exact capacity gating (ISSUE 6): every accepted chunk's
+        # unmapped covering blocks are reserved against a dry-run ledger
+        # BEFORE the chunk is committed, so the bucket allocations below
+        # can never hit pool exhaustion mid-prefill.  ``reserved``
+        # accumulates this round's not-yet-allocated vpns; each gate
+        # replays them against a FRESH ledger (sharing/migration at
+        # registration may have consumed flex slots since the last one).
+        reserved: List[int] = []
+        gate_alloc = (self._n_attn_layers > 0
+                      and self.hybrid_cfg.mode != "restrictive_only")
         while budget >= bs:
             req = self._current
             if req is None:
                 req = self.scheduler.select(self._step_count)
                 if req is None:
                     break
+                if req.seq_id in self._preempted:
+                    # a preempted sequence re-entered through the queue:
+                    # resume restores its saved blocks and rows, charging
+                    # no prefill budget (nothing is re-forwarded)
+                    if not self._resume_preempted(req, reserved):
+                        break              # no slot / no capacity yet
+                    if req.seq_id not in self._prefilling:
+                        continue           # decode-live again this step
+                    req = self._current    # mid-prefill: keep chunking
             if req.seq_id not in self._slot_of:
                 if not m._free_seq_slots:
                     break                      # wait for a release
+                if (self.overload_policy == "fail" and gate_alloc
+                        and not self._footprint_admit(req)):
+                    break          # fail-fast: serve only what fits whole
                 slot = m.register_sequence(req.seq_id)
                 self._slot_of[req.seq_id] = slot
                 self.requests[req.seq_id] = req
@@ -560,13 +650,38 @@ class Engine:
             take = min(total - start, budget // bs * bs)
             if take <= 0:
                 break
+            end = start + take
+            if gate_alloc:
+                need = self._chunk_vpns(req, start, end, front)
+                forced = (bool(need) and self._injector is not None
+                          and self._injector.alloc_unavailable(
+                              self._step_count, "admit"))
+                if forced:
+                    break      # injected transient denial: defer a step
+                if need and not self._capacity_ok(reserved, need):
+                    if (not reserved
+                            and not self._others_hold_blocks(req.seq_id)):
+                        # nothing else holds (or will hold) pool blocks,
+                        # yet this prompt still does not fit: no amount
+                        # of preemption can ever admit it
+                        raise PoolExhausted(
+                            f"request {req.seq_id}'s prompt alone "
+                            "exceeds the KV pool and cannot be admitted",
+                            **self._pool_diag())
+                    st_in = self._states[req.seq_id]
+                    if (self.overload_policy != "preempt"
+                            or not self._make_room(
+                                st_in, reserved, need,
+                                exclude={c[0].seq_id for c in chunks}
+                                | {req.seq_id})):
+                        break          # defer: stay queued / mid-prefill
+                reserved.extend(need)
             if self._current is None:
                 # first chunk admitted: the engine owns the request until
                 # its final chunk installs (a policy can reorder queued
                 # requests, never interleave half-prefilled prompts)
                 self.scheduler.pop(req)
                 self._current = req
-            end = start + take
             budget -= take
             self._prefilling[req.seq_id] = end
             final = end == total
@@ -622,6 +737,331 @@ class Engine:
         for (s_pad, nblk_buf), grp in sorted(pbuckets.items()):
             pending.extend(self._prefix_bucket(grp, s_pad, nblk_buf, front))
         return pending
+
+    # -------------------------------------------- overload / host KV tier
+    def _chunk_vpns(self, req, start: int, end: int,
+                    front: int) -> List[int]:
+        """Vpns a prompt chunk's bucket allocation will actually fault in
+        (unmapped covering blocks; mirrors _prefill_bucket/_prefix_bucket
+        coverage exactly, including the frontend prefix on chunk 0)."""
+        m = self.manager
+        bs = self.cfg.kv_block_size
+        s = m.seq_slot(req.seq_id)
+        cb0 = (front + start) // bs if start else 0
+        return [self.hybrid_cfg.vpn(s, cb)
+                for cb in range(cb0, (front + end) // bs)
+                if m.lookup(req.seq_id, cb)[0] < 0]
+
+    def _capacity_ok(self, reserved, need) -> bool:
+        """Exact dry-run: could the pool allocate ``reserved`` (this
+        round's already-accepted vpns) PLUS ``need`` right now?"""
+        return self.manager.alloc_ledger().reserve(
+            list(reserved) + list(need))
+
+    def _others_hold_blocks(self, seq_id: int) -> bool:
+        m = self.manager
+        s = m.seq_slot(seq_id)
+        nblk = self.hybrid_cfg.max_blocks_per_seq
+        return any(vpn // nblk != s for vpn in m.blocks)
+
+    def _pick_victim(self, exclude=frozenset()):
+        """Choose a preemption victim via the scheduler's policy.
+
+        Decode-live sequences are preferred over mid-prefill ones (a
+        mid-prefill victim re-runs no work either way, but decode-live
+        sequences hold full contexts — the policy gets the richer pool);
+        finished-but-unreleased sequences are never victims (``release``
+        is the tool for those).  Returns a RequestState or None."""
+        decode, prefill = [], []
+        for sid in self._slot_of:
+            if sid in exclude:
+                continue
+            st = self._states.get(sid)
+            if st is None or st.done:
+                continue
+            (prefill if sid in self._prefilling else decode).append(st)
+        cands = decode or prefill
+        if not cands:
+            return None
+        vic_fn = getattr(self.scheduler, "victim", None)
+        if vic_fn is None:
+            from .scheduler import default_victim as vic_fn
+        return vic_fn(cands, self._step_count)
+
+    def _make_room(self, incoming_st, reserved, need, exclude) -> bool:
+        """Preempt policy-approved victims until ``reserved + need``
+        fits.  ``should_preempt`` gates every eviction (FIFO/SPF always
+        say no — admission waits; priority lets a strictly
+        higher-effective request evict), so this can only loop as long
+        as victims keep being approved, and each preemption removes one
+        candidate."""
+        while not self._capacity_ok(reserved, need):
+            vic = self._pick_victim(exclude)
+            if vic is None:
+                return False
+            sp = getattr(self.scheduler, "should_preempt", None)
+            if sp is None or not sp(incoming_st.request,
+                                    incoming_st.arrival, vic,
+                                    self._step_count):
+                return False
+            self.preempt_request(vic.request.seq_id)
+        return True
+
+    def _footprint_blocks(self, req) -> int:
+        """Whole-request KV footprint in blocks (prompt + frontend + all
+        of max_new_tokens, plus one spare block for a speculative window
+        overshoot), clamped to the per-sequence maximum."""
+        bs = self.cfg.kv_block_size
+        total = (self._front_tokens() + len(np.asarray(req.prompt))
+                 + req.max_new_tokens)
+        need = (total + bs - 1) // bs + (1 if self.spec_K else 0)
+        return min(need, self.spec.max_blocks_per_seq)
+
+    def _footprint_admit(self, req) -> bool:
+        """Fail-fast admission gate: admit only when the request's FULL
+        footprint fits next to every resident sequence's — "serve only
+        what fits", the PR-5 behaviour made explicit.  Raises for a
+        request whose footprint alone exceeds the pool."""
+        m = self.manager
+        need = self._footprint_blocks(req)
+        cap = self.hybrid_cfg.total_slots
+        if need > cap:
+            raise PoolExhausted(
+                f"request {req.seq_id} needs {need} KV blocks but the "
+                f"pool only has {cap}", **self._pool_diag())
+        held = 0
+        nblk = self.spec.max_blocks_per_seq
+        for sid in self._slot_of:
+            st = self._states[sid]
+            if st.done:        # finished-unreleased: count actual blocks
+                held += sum(1 for b in range(nblk)
+                            if m.lookup(sid, b)[0] >= 0)
+            else:
+                held += self._footprint_blocks(st.request)
+        return held + need <= cap
+
+    def _pool_diag(self) -> Dict[str, int]:
+        """Structured occupancy diagnostics attached to PoolExhausted."""
+        m = self.manager
+        return dict(
+            pool_blocks=self.hybrid_cfg.total_slots,
+            mapped_blocks=sum(1 for i in m.blocks.values() if i.slot >= 0),
+            free_flex=len(m.flex_free),
+            queued=len(self.waiting),
+            live=sum(1 for sid in self.requests
+                     if not self._states[sid].done),
+            finished_unreleased=sum(1 for sid in self._slot_of
+                                    if self._states[sid].done),
+            preempted=len(self._preempted))
+
+    def preempt_request(self, seq_id: int) -> None:
+        """Swap a live sequence out to the host KV tier (ISSUE 6).
+
+        Safe points only: between steps, or inside ``step()`` before
+        admission / after the commit (the injector's "pre"/"post"
+        phases) — never between a dispatch and its fetch.  Everything
+        needed to continue bit-identically is captured in ONE batched
+        ``device_get``: the mapped pool blocks (KV), the recurrent
+        (ssm/conv) and cross-attention rows, the spec history row and
+        the committed context.  Sampling keys need no save — they derive
+        from (seed, seq_id) and fold the absolute position, so a resumed
+        request samples exactly what it would have uninterrupted.  The
+        request re-enters the scheduler queue with its ORIGINAL arrival
+        step, so aging policies keep its seniority."""
+        st = self._states.get(seq_id)
+        if st is None or st.done or seq_id not in self._slot_of:
+            raise ValueError(f"sequence {seq_id} is not live")
+        m = self.manager
+        slot = self._slot_of[seq_id]
+        # pending migration copies must land BEFORE the gather: the
+        # manager's slot map is post-copy, the pool data may not be yet
+        self._apply_copies()
+        fetch: Dict[str, Any] = {}
+        mapped: List[int] = []
+        if self._n_attn_layers:
+            for b in range(self.spec.max_blocks_per_seq):
+                bslot, _ = m.lookup(seq_id, b)
+                if bslot >= 0:
+                    mapped.append(bslot)
+            if mapped:
+                sl = jnp.asarray(mapped, jnp.int32)
+                fetch["kv"] = jnp.stack([self.dstate["k_pool"][:, sl],
+                                         self.dstate["v_pool"][:, sl]])
+        for key in ("ssm", "conv", "cross_k", "cross_v"):
+            if key in self.dstate:
+                fetch[key] = self.dstate[key][:, slot]
+        if self.spec_K:
+            fetch["hist"] = self.dstate["hist"][slot]
+        host = jax.device_get(fetch) if fetch else {}
+        saved = m.preempt(seq_id)
+        assert len(saved) == len(mapped), "gather/release block mismatch"
+        rec = _HostTierSeq(
+            seq_id=seq_id, ctx=int(self._ctx_host[slot]),
+            prefill_progress=self._prefilling.get(seq_id),
+            blocks=saved, kv=host.get("kv"),
+            rows={k: v for k, v in host.items() if k != "kv"},
+            nbytes=sum(np.asarray(v).nbytes for v in host.values()))
+        # engine-side slot teardown (release() minus the finishing)
+        del self._slot_of[seq_id]
+        self.dstate["ctx_len"] = self.dstate["ctx_len"].at[slot].set(0)
+        self._ctx_host[slot] = 0
+        if self.spec_K:
+            self.dstate["hist"] = self.dstate["hist"].at[slot].set(-1)
+        req = self.requests.pop(seq_id)
+        self._prefilling.pop(seq_id, None)
+        if self._current is not None and self._current.seq_id == seq_id:
+            self._current = None
+        self._pending_samp = [(s, r) for s, r in self._pending_samp
+                              if r.seq_id != seq_id]
+        self._preempted[seq_id] = rec
+        self._swap_bytes_out += rec.nbytes
+        st.preempts += 1
+        self._progress_events += 1
+        self.scheduler.add(req, st.arrival)
+        self._sync_translation()
+
+    def _resume_preempted(self, req: Request, reserved) -> bool:
+        """Bring a preempted sequence back from the host tier: fresh
+        sequence slot, fresh pool slots (capacity-gated against the
+        ledger, preempting policy-approved victims if needed), saved KV
+        scattered back, rows and context restored, sampling re-scattered.
+        A mid-prefill victim becomes the engine-owned chunk request again
+        and continues through the normal prefix-KV chunk path.  Returns
+        False — leaving the request queued — when no sequence slot or
+        capacity is available yet."""
+        m = self.manager
+        sid = req.seq_id
+        rec = self._preempted[sid]
+        st = self._states[sid]
+        if not m._free_seq_slots:
+            return False
+        if (self._injector is not None
+                and self._injector.alloc_unavailable(self._step_count,
+                                                     "resume")):
+            return False
+        trial = m._free_seq_slots[-1]    # the slot register_sequence pops
+        vpns = [self.hybrid_cfg.vpn(trial, b) for b, _ in rec.blocks]
+        if not self._capacity_ok(reserved, vpns):
+            if (self.overload_policy != "preempt"
+                    or not self._make_room(st, reserved, vpns,
+                                           exclude={sid})):
+                return False
+        self.scheduler.pop(req)
+        slot = m.register_sequence(sid)
+        m.resume(sid, rec.blocks)
+        self._apply_copies()        # resume-time evictions land first
+        if rec.kv is not None:
+            # re-resolve AFTER the copies: a later block's allocation may
+            # have evict-migrated an earlier one within this same resume,
+            # so the scatter must target where each block lives now
+            dst = jnp.asarray([m.lookup(sid, b)[0] for b, _ in rec.blocks],
+                              jnp.int32)
+            kv = jnp.asarray(rec.kv)
+            self.dstate["k_pool"] = \
+                self.dstate["k_pool"].at[:, dst].set(kv[0])
+            self.dstate["v_pool"] = \
+                self.dstate["v_pool"].at[:, dst].set(kv[1])
+        for key, row in rec.rows.items():
+            if key == "hist":
+                self.dstate["hist"] = \
+                    self.dstate["hist"].at[slot].set(jnp.asarray(row))
+            else:
+                self.dstate[key] = \
+                    self.dstate[key].at[:, slot].set(jnp.asarray(row))
+        self.dstate["ctx_len"] = \
+            self.dstate["ctx_len"].at[slot].set(rec.ctx)
+        self._ctx_host[slot] = rec.ctx
+        self._slot_of[sid] = slot
+        self.requests[sid] = req
+        self._pending_samp.append((slot, req))
+        if rec.prefill_progress is not None:
+            self._prefilling[sid] = rec.prefill_progress
+            self._current = req
+        del self._preempted[sid]
+        self._swap_bytes_in += rec.nbytes
+        st.last_step = self._step_count
+        self._progress_events += 1
+        return True
+
+    def _run_forced_preempts(self, targets) -> None:
+        """Apply the injector's forced preemptions; ``"auto"`` targets
+        resolve through the victim policy, invalid/finished targets are
+        skipped (the schedule may outlive the sequence it named)."""
+        for t in targets:
+            if t == "auto" or t is None:
+                vic = self._pick_victim()
+                sid = None if vic is None else vic.request.seq_id
+            else:
+                sid = int(t)
+            st = self._states.get(sid) if sid is not None else None
+            if (st is None or st.done or sid not in self._slot_of
+                    or self.hybrid_cfg.mode == "restrictive_only"):
+                continue
+            self.preempt_request(sid)
+
+    def _ensure_decode_blocks(self, st: RequestState) -> None:
+        """Map every block the next decode dispatch will write for
+        ``st`` (the boundary block, or the whole [pos, pos+K] window
+        under speculation).
+
+        Hybrid/flexible: a capacity miss walks the degradation ladder —
+        preempt a policy-chosen victim and retry — instead of the
+        pre-overload SWAP fall-through, where a SWAP'd current block
+        made ``w_valid`` mask the KV write: the token stream kept going
+        but the cache entry was silently dropped.  Under
+        ``overload_policy="fail"`` the miss raises ``PoolExhausted``
+        with occupancy diagnostics.  ``restrictive_only`` keeps the
+        legacy per-block swap_in path bit-for-bit (set conflicts swap by
+        design, Fig. 9)."""
+        m = self.manager
+        bs = self.cfg.kv_block_size
+        K = self.spec_K
+        nblk = self.spec.max_blocks_per_seq
+        sid = st.request.seq_id
+        pos = int(self._ctx_host[self._slot_of[sid]])
+        if K:
+            blocks = range(pos // bs, min((pos + K) // bs, nblk - 1) + 1)
+        elif pos % bs == 0:
+            blocks = (pos // bs,)
+        else:
+            return
+        restrictive = self.hybrid_cfg.mode == "restrictive_only"
+        for b in blocks:
+            bslot, seg = m.lookup(sid, b)
+            if bslot >= 0:
+                continue
+            if restrictive:
+                info = m.allocate_block(sid, b)
+                if info.seg == SWAP:
+                    m.swap_in(sid, b)
+                    st.swap_faults += 1
+                continue
+            in_swap = seg == SWAP     # legacy per-block swap bookkeeping
+            vpn = self.hybrid_cfg.vpn(m.seq_slot(sid), b)
+            first = True
+            while True:
+                forced = (first and self._injector is not None
+                          and self._injector.alloc_unavailable(
+                              self._step_count, "decode"))
+                first = False
+                if not forced and m.alloc_ledger().reserve([vpn]):
+                    if in_swap:
+                        m.swap_in(sid, b)
+                        st.swap_faults += 1
+                    else:
+                        m.allocate_block(sid, b)
+                    break
+                if self.overload_policy != "preempt":
+                    raise PoolExhausted(
+                        f"decode step cannot allocate a KV block for "
+                        f"sequence {sid}", **self._pool_diag())
+                vic = self._pick_victim(exclude={sid})
+                if vic is None:
+                    raise PoolExhausted(
+                        f"sequence {sid} cannot hold its own KV blocks "
+                        "and nothing is left to preempt",
+                        **self._pool_diag())
+                self.preempt_request(vic.request.seq_id)
 
     def _install_sampling(self) -> None:
         """Scatter newly registered requests' SamplingParams into the
@@ -692,6 +1132,7 @@ class Engine:
         slot_ids = np.full(B_pad, -1, np.int32)
         ctx = np.zeros(B_pad, np.int32)
         last_pos = np.zeros(B_pad, np.int32)
+        allocated: List[Tuple[int, int, int]] = []
         frontend = None
         if self.cfg.frontend != "none":
             frontend = np.zeros((B_pad, self.cfg.frontend_tokens,
@@ -718,9 +1159,16 @@ class Engine:
                 info = m.allocate_block(req.seq_id, cb)
                 if info.seg == SWAP:
                     raise RuntimeError("pool exhausted during prefill")
-                slots[i, cb] = info.slot
-        # allocation-time evictions queued copies: drain before the scatter
+                allocated.append((i, req.seq_id, cb))
+        # allocation-time evictions queued copies: drain before the
+        # scatter, then RE-resolve every slot — a later allocation in
+        # this same loop may have evict-migrated an earlier one, and the
+        # scatter must write where the block lives NOW, not where it was
+        # first placed (under a tight pool the stale slot already
+        # belongs to another block)
         self._apply_copies()
+        for i, sid, cb in allocated:
+            slots[i, cb] = m.lookup(sid, cb)[0]
         batch = {"tokens": jnp.asarray(tokens)}
         if self._has_recurrent:
             # per-row real lengths: dt is zeroed past them, so the pow2
@@ -762,6 +1210,7 @@ class Engine:
         ctx = np.zeros(B_pad, np.int32)
         pctx = np.zeros(B_pad, np.int32)
         last_pos = np.zeros(B_pad, np.int32)
+        allocated: List[Tuple[int, int, int, int]] = []
         for i, (req, start, end, final) in enumerate(grp):
             prompt = np.asarray(req.prompt)
             take = end - start
@@ -779,11 +1228,16 @@ class Engine:
                 info = m.allocate_block(req.seq_id, cb)
                 if info.seg == SWAP:
                     raise RuntimeError("pool exhausted during prefill")
-                new_slots[i, j] = info.slot
+                allocated.append((i, j, req.seq_id, cb))
         # allocation-time evictions queue slot migrations: drain them
         # BEFORE reading the prefix slots so the gather below sees the
-        # post-copy pool layout
+        # post-copy pool layout — and re-resolve the NEW slots too: a
+        # later allocation in the loop above may have evict-migrated an
+        # earlier one, so the write slot captured at allocation time can
+        # be stale (it already belongs to the evicting block)
         self._apply_copies()
+        for i, j, sid, cb in allocated:
+            new_slots[i, j] = m.lookup(sid, cb)[0]
         if self._n_attn_layers:
             for i, (req, start, end, final) in enumerate(grp):
                 for cb in range((front + start) // bs):
@@ -913,6 +1367,11 @@ class Engine:
         their ``RequestOutput.new_token_ids`` carry every committed
         token — or ``Request.generated``."""
         self._step_count += 1
+        if self._injector is not None:
+            # safe point #1: before admission — a forced "pre" preempt
+            # tears a victim out between prompt chunks / decode steps
+            self._run_forced_preempts(
+                self._injector.forced_preempts(self._step_count, "pre"))
         fetch = {}
         pending = self._admit(self.prefill_budget)
         for r, tok in pending:
@@ -924,34 +1383,23 @@ class Engine:
         bs = self.cfg.kv_block_size
         K = self.spec_K
         nblk = self.spec.max_blocks_per_seq
+        if live and self._n_attn_layers:
+            # map the blocks this dispatch will write FIRST: an
+            # allocation miss may preempt another live sequence (it then
+            # drops out of the batch below), so tokens/active are built
+            # only after residency settles
+            for st in live:
+                if st.request.seq_id in self._slot_of:
+                    self._ensure_decode_blocks(st)
+            live = [st for st in live
+                    if st.request.seq_id in self._slot_of]
         if live:
-            # allocate current blocks at boundaries; gather last tokens —
-            # all from host state, no device reads
+            # gather last tokens — all from host state, no device reads
             tokens = np.zeros(self.max_batch, np.int64)
             active = np.zeros(self.max_batch, bool)
             for st in live:
-                sid = st.request.seq_id
-                slot = self._slot_of[sid]
+                slot = self._slot_of[st.request.seq_id]
                 active[slot] = True
-                pos = int(self._ctx_host[slot])
-                if self._n_attn_layers and not K and pos % bs == 0:
-                    info = m.allocate_block(sid, pos // bs)
-                    if info.seg == SWAP:
-                        info = m.swap_in(sid, pos // bs)
-                        st.swap_faults += 1
-                if self._n_attn_layers and K:
-                    # the draft window writes positions [pos, pos+K]:
-                    # ensure every covering block is mapped (a rejected
-                    # tail may have deallocated — or never reached —
-                    # mid-window blocks, so lookup first)
-                    for b in range(pos // bs,
-                                   min((pos + K) // bs, nblk - 1) + 1):
-                        if m.lookup(sid, b)[0] >= 0:
-                            continue
-                        info = m.allocate_block(sid, b)
-                        if info.seg == SWAP:
-                            info = m.swap_in(sid, b)
-                            st.swap_faults += 1
                 tokens[slot] = st.generated[-1]
             self._apply_copies()
             self._sync_translation()
@@ -982,6 +1430,10 @@ class Engine:
                 fetch["mapped"] = tstats["mapped"]
 
         if not fetch:
+            if self._injector is not None:
+                self._run_forced_preempts(
+                    self._injector.forced_preempts(self._step_count,
+                                                   "post"))
             return {}
         # ---- the step's ONE device->host fetch --------------------------
         host = jax.device_get(fetch)
@@ -1028,12 +1480,19 @@ class Engine:
                     nxt = int(host["next"][self._slot_of[sid]])
                     st.generated.append(nxt)
                     st.new_tokens.append(nxt)
+                    st.last_step = self._step_count
                     out[sid] = nxt
                     self._maybe_finish(st, nxt)
         for r, _ in pending:
             nxt = int(host[f"p{r.seq_id}"])
             self._complete_prefill(r, nxt)
             out[r.seq_id] = nxt
+        if self._injector is not None:
+            # safe point #2: after the commit — under speculation this is
+            # the adversarial moment between a window's verify/commit and
+            # the next dispatch
+            self._run_forced_preempts(
+                self._injector.forced_preempts(self._step_count, "post"))
         return out
 
     def _commit_spec(self, live, host, ctx_pre, out) -> None:
@@ -1087,6 +1546,7 @@ class Engine:
             # construction (cross-checked in tests).
             st.drafted += K
             st.accepted += max(committed - 1, 0)
+            st.last_step = self._step_count
             self._spec_drafted += K
             self._spec_accepted += max(committed - 1, 0)
             if cap <= 0 and not st.done:
@@ -1136,26 +1596,37 @@ class Engine:
         ``RequestOutput`` per request that produced tokens or finished
         since the previous poll.
 
+        Under overload (``overload_policy="preempt"``, the default) a
+        full pool preempts victims to the host KV tier and keeps
+        serving; ``PoolExhausted`` survives only for requests that can
+        NEVER run — a prompt whose footprint alone exceeds the pool, or
+        a queue stuck behind finished-but-unreleased sequences — and
+        carries structured occupancy diagnostics (``exc.diag``).
+
         Raises ``PoolExhausted`` when a step makes NO progress — no
-        token decoded, no prompt chunk admitted — while requests are
-        still queued: every slot is held by a finished-but-unreleased
-        sequence (``auto_release=False``), so iterating would spin
-        forever.  Release sequences or enable ``auto_release``."""
+        token decoded, no prompt chunk admitted, no sequence preempted
+        or resumed — while requests are still queued: every slot is held
+        by a finished-but-unreleased sequence (``auto_release=False``),
+        so iterating would spin forever.  Release sequences or enable
+        ``auto_release``."""
         if self.has_unfinished():
             # slot count included: a zero-token finish (capacity stop)
             # that auto-releases its slot IS progress — the freed slot
-            # admits a queued request on the next step
+            # admits a queued request on the next step.  So are
+            # preempt/resume events (_progress_events): a step that only
+            # rearranged residency is working, not stuck.
             before = (dict(self._prefilling), len(self.waiting),
-                      len(self._slot_of))
+                      len(self._slot_of), self._progress_events)
             out = self.step()
             if (not out and self.waiting
                     and before == (self._prefilling, len(self.waiting),
-                                   len(self._slot_of))):
+                                   len(self._slot_of),
+                                   self._progress_events)):
                 raise PoolExhausted(
                     f"{len(self.waiting)} queued request(s) cannot be "
                     "admitted and nothing is decoding: release finished "
                     "sequences or construct the engine with "
-                    "auto_release=True")
+                    "auto_release=True", **self._pool_diag())
         return self._drain_outputs()
 
     def stream(self):
@@ -1208,6 +1679,18 @@ class Engine:
         s = dict(self.manager.stats)
         s["spec_drafted"] = self._spec_drafted
         s["spec_accepted"] = self._spec_accepted
+        # overload/host-tier telemetry (ISSUE 6): sequence-granularity
+        # preempt/resume counts, current host-tier residency, and the
+        # host<->device swap traffic in bytes
+        s["overload"] = {
+            "preempted_seqs": int(self.manager.stats.get("preempt_out", 0)),
+            "resumed_seqs": int(self.manager.stats.get("preempt_in", 0)),
+            "host_tier_seqs": len(self._preempted),
+            "swap_bytes_out": self._swap_bytes_out,
+            "swap_bytes_in": self._swap_bytes_in,
+            "request_preempts": sum(st.preempts
+                                    for st in self._states.values()),
+        }
         s["per_request"] = {
             sid: {"rsw_hits": st.rsw_hits, "flex_walks": st.flex_walks,
                   "swap_faults": st.swap_faults, "drafted": st.drafted,

@@ -15,6 +15,12 @@ Two ways to admit a prompt chunk, sharing the install/scatter machinery:
   is linear in chunk length, independent of how long the prefix already
   is.
 
+Re-admission after preemption (PR 6) enters through the SAME two steps:
+a resumed sequence's saved KV is scattered back bitwise first, then any
+not-yet-prefilled prompt tail continues as ordinary chunks — chunk k>0
+prefix-KV against the restored blocks, no recompute.  There is no
+separate resume forward; graceful degradation reuses this machinery.
+
 One dispatch admits a whole *bucket* of sequences: the prompts' K/V are
 computed by the forward, then scattered into the pool slots the manager
 translated (``slots`` input, produced host-side by fault-based

@@ -24,6 +24,17 @@ instance, or a zero-arg factory):
 ``now``/``arrival`` are in engine steps (the engine's step counter).
 All policies break ties by submission order, so equal-keyed requests
 drain FIFO.
+
+Overload (ISSUE 6): policies additionally pick preemption VICTIMS.  When
+the engine cannot get a KV block it calls ``victim(candidates, now)``
+with the live ``RequestState`` objects (each exposing ``.request``,
+``.arrival`` and ``.last_step`` — the step of its latest commit) and
+preempts the returned one to the host tier; ``should_preempt(req,
+arrival, victim_state, now)`` decides whether an INCOMING request may
+evict a live one at admission time (only the priority policy ever says
+yes — FIFO/SPF admission waits instead, avoiding preemption churn for
+queue-position gains).  Both methods are optional on custom schedulers:
+the engine falls back to :func:`default_victim` / never-preempt.
 """
 from __future__ import annotations
 
@@ -55,11 +66,32 @@ class Scheduler(Protocol):
         ...
 
 
+def default_victim(candidates, now: int):
+    """LRU-decode victim selection (the engine's fallback policy).
+
+    Prefer the sequence that committed least recently (``last_step``);
+    among those, the youngest arrival — the oldest request has the most
+    sunk work, so it is protected — and finally the latest-submitted
+    ``seq_id``.  ``candidates`` is a non-empty list of the engine's
+    ``RequestState`` objects."""
+    return min(candidates,
+               key=lambda st: (st.last_step, -st.arrival,
+                               -st.request.seq_id))
+
+
 class FIFOScheduler:
     """Submission order — the PR-2 deque, bit-for-bit."""
 
     def __init__(self) -> None:
         self._q: Deque = deque()
+
+    # overload hooks: FIFO preempts the least-recently-decoded/youngest
+    # sequence and never preempts on behalf of an incoming request
+    victim = staticmethod(default_victim)
+
+    def should_preempt(self, req, arrival: int, victim_state,
+                       now: int) -> bool:
+        return False
 
     def add(self, req, arrival: int) -> None:
         self._q.append(req)
@@ -94,6 +126,18 @@ class ShortestPromptFirst:
         self._entries.append((int(np.asarray(req.prompt).size), self._n,
                               req))
         self._n += 1
+
+    @staticmethod
+    def victim(candidates, now: int):
+        """Longest prompt first — the mirror of the admission order: the
+        sequence SPF values least is the one holding the most blocks."""
+        return max(candidates,
+                   key=lambda st: (int(np.asarray(st.request.prompt).size),
+                                   st.arrival, st.request.seq_id))
+
+    def should_preempt(self, req, arrival: int, victim_state,
+                       now: int) -> bool:
+        return False
 
     def select(self, now: int):
         if not self._entries:
@@ -153,6 +197,23 @@ class PriorityAgingScheduler:
                 del self._entries[i]
                 return
         raise ValueError("request not queued")
+
+    def victim(self, candidates, now: int):
+        """Lowest effective priority loses its blocks first; ties go to
+        the youngest arrival, then the latest submission."""
+        return min(candidates,
+                   key=lambda st: (self._effective(st.request, st.arrival,
+                                                   now),
+                                   -st.arrival, -st.request.seq_id))
+
+    def should_preempt(self, req, arrival: int, victim_state,
+                       now: int) -> bool:
+        """An incoming request may evict a live one only when its aged
+        effective priority STRICTLY exceeds the victim's — equal
+        priorities wait, so same-class traffic never thrashes."""
+        return (self._effective(req, arrival, now)
+                > self._effective(victim_state.request,
+                                  victim_state.arrival, now))
 
     def pending(self) -> tuple:
         return tuple(r for r, _, _ in self._entries)
