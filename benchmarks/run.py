@@ -51,6 +51,8 @@ KEY_METRICS = {
     "overload": ["goodput_ratio_preempt_over_fail",
                  "ttft_p99_ratio_preempt_over_fail",
                  "preemptions_per_request"],
+    "sharded": ["step_latency_ratio_vs_single_device",
+                "kv_bytes_per_shard"],
 }
 
 

@@ -1,7 +1,9 @@
 """Utopia core: hybrid restrictive/flexible KV-block translation."""
 from .segments import HybridConfig, RestSegConfig, FlexSegConfig, pool_slots_for
 from .hashes import HASHES, get_hash
-from .tar_sf import RestSegState, RSWResult, init_restseg, rsw, insert, remove
+from .tar_sf import (RestSegState, RSWResult, init_restseg, rsw, insert,
+                     remove, probe_rows)
+from .partition import Partition
 from .flex_table import FlexTable, RadixTable, RadixBuilder, init_flex_table
 from .translate import (TranslationState, TranslateResult, translate,
                         translate_radix, translate_ech, translate_pom)
@@ -15,6 +17,7 @@ __all__ = [
     "HybridConfig", "RestSegConfig", "FlexSegConfig", "pool_slots_for",
     "HASHES", "get_hash",
     "RestSegState", "RSWResult", "init_restseg", "rsw", "insert", "remove",
+    "probe_rows", "Partition",
     "FlexTable", "RadixTable", "RadixBuilder", "init_flex_table",
     "TranslationState", "TranslateResult", "translate",
     "translate_radix", "translate_ech", "translate_pom",

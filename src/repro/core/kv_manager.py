@@ -156,6 +156,22 @@ class HybridKVManager:
         # since the last take_dirty() drain
         self._dirty_sets: set = set()
         self._dirty_flex: set = set()
+        # sharded serving (DESIGN.md §sharded-serving): when the engine
+        # partitions the translation structures over a mesh, per-shard
+        # translation counters are attributed HERE — the same call site
+        # that mutates the global counters — so cross-shard sums equal
+        # the globals by construction, never by reconciliation
+        self.partition = None
+        self.shard_stats: List[Dict[str, int]] = []
+
+    def set_partition(self, partition) -> None:
+        """Attach a :class:`core.partition.Partition`: every subsequent
+        ``record_device_stats`` also attributes rsw_hits (to the shard
+        owning the vpn's SET) and flex_walks (to the shard owning the
+        vpn's flex-table ROW) per shard."""
+        self.partition = partition
+        self.shard_stats = [defaultdict(int)
+                            for _ in range(partition.n_shards)]
 
     # ----------------------------------------------------------- sequences
     def register_sequence(self, seq_id: int) -> int:
@@ -449,6 +465,16 @@ class HybridKVManager:
         self.stats["rsw_hits"] += int(in_rest.sum())
         miss = ~in_rest
         self.stats["flex_walks"] += int(miss.sum())
+        if self.partition is not None:
+            part = self.partition
+            hit_sets = np.asarray(self.hash(vpns[in_rest].astype(np.int32),
+                                            self.cfg.num_sets))
+            hit_owner = part.shard_of_set(hit_sets)
+            walk_owner = part.shard_of_vpn(vpns[miss])
+            for s in range(part.n_shards):
+                self.shard_stats[s]["rsw_hits"] += int((hit_owner == s).sum())
+                self.shard_stats[s]["flex_walks"] += int(
+                    (walk_owner == s).sum())
         if miss.any():
             self.tracker.record_walk(vpns[miss], accesses[miss])
 
@@ -647,3 +673,11 @@ class HybridKVManager:
             assert self.stats.get(d, 0) == parts, \
                 (f"stats[{d!r}]={self.stats.get(d, 0)} != sum of "
                  f"per-reason counters {parts}")
+        # sharded serving: per-shard attribution must sum EXACTLY to the
+        # global counters (same mutation site, so drift is a bug)
+        if self.partition is not None:
+            for key in ("rsw_hits", "flex_walks"):
+                total = sum(s.get(key, 0) for s in self.shard_stats)
+                assert total == self.stats.get(key, 0), \
+                    (f"per-shard {key} sum {total} != global "
+                     f"{self.stats.get(key, 0)}")

@@ -62,6 +62,24 @@ class RSWResult(NamedTuple):
     tar_touched: jnp.ndarray  # int32 — tag comparisons actually performed
 
 
+def probe_rows(tags: jnp.ndarray, counters: jnp.ndarray, vpn: jnp.ndarray):
+    """SF ∥ TAR probe of PRE-GATHERED set rows.
+
+    ``tags (..., assoc)`` and ``counters (...)`` are the TAR row and SF
+    counter of each vpn's set (gathered by the caller — ``rsw`` gathers
+    from the full tables, the sharded lookup from its local set chunk).
+    This is the single source of truth for the paper's tag-match / set-
+    filter semantics: a zero tag can never match (tags store ``vpn+1``),
+    and an SF counter of 0 skips the TAR compare entirely.
+    Returns ``(hit, way, sf_skipped)`` shaped like ``vpn``.
+    """
+    eq = tags == (vpn[..., None].astype(jnp.int32) + 1)
+    nonempty = counters > 0
+    hit = jnp.any(eq, axis=-1) & nonempty
+    way = jnp.where(hit, jnp.argmax(eq, axis=-1).astype(jnp.int32), -1)
+    return hit, way, ~nonempty
+
+
 def rsw(state: RestSegState, vpn: jnp.ndarray, hash_name: str = "modulo") -> RSWResult:
     """Batched RestSeg Walk.  ``vpn``: int32 array of any shape.
 
@@ -73,13 +91,9 @@ def rsw(state: RestSegState, vpn: jnp.ndarray, hash_name: str = "modulo") -> RSW
     set_idx = h(vpn.astype(jnp.int32), state.n_sets).astype(jnp.int32)
     counters = state.sf[set_idx]                      # (..., )
     tags = state.tar[set_idx]                         # (..., assoc)
-    eq = tags == (vpn[..., None].astype(jnp.int32) + 1)
-    nonempty = counters > 0
-    hit = jnp.any(eq, axis=-1) & nonempty
-    way = jnp.where(hit, jnp.argmax(eq, axis=-1).astype(jnp.int32), -1)
+    hit, way, sf_skipped = probe_rows(tags, counters, vpn)
     slot = jnp.where(hit, set_idx * state.assoc + jnp.maximum(way, 0), 0)
-    sf_skipped = ~nonempty
-    tar_touched = jnp.where(nonempty, state.assoc, 0).astype(jnp.int32)
+    tar_touched = jnp.where(~sf_skipped, state.assoc, 0).astype(jnp.int32)
     return RSWResult(hit=hit, slot=slot.astype(jnp.int32), way=way,
                      sf_skipped=sf_skipped, tar_touched=tar_touched)
 

@@ -9,11 +9,13 @@ gradient compression.
                     cross-pod data-parallel hop.
 """
 from . import compression
-from .sharding import (ShardingRules, make_pins, param_shardings, batch_spec)
+from .sharding import (ShardingRules, make_pins, param_shardings, batch_spec,
+                       kv_state_specs)
 from .pipeline import gpipe_reference, gpipe_spmd, bubble_fraction
 
 __all__ = [
     "compression",
     "ShardingRules", "make_pins", "param_shardings", "batch_spec",
+    "kv_state_specs",
     "gpipe_reference", "gpipe_spmd", "bubble_fraction",
 ]

@@ -139,6 +139,36 @@ def batch_spec(batch, rules: ShardingRules, mesh: Mesh):
     return jax.tree.map(leaf, batch)
 
 
+# ---------------------------------------- KV / translation state rules
+
+def kv_state_specs(state, spec):
+    """PartitionSpecs of the SPMD engine's decode state (one per key).
+
+    The sharded serving layout (DESIGN.md §sharded-serving): the KV pool
+    is slot-sharded over the model axis in the shard-contiguous physical
+    numbering of ``core.partition.Partition``, the TAR/SF tables are
+    set-index-partitioned and the flat flex table vpn-range-partitioned
+    over the same axis; everything else — context lengths, sampling
+    state, recurrent (ssm/conv) state, cross K/V, spec-decode history —
+    is replicated (the compute is fully replicated; only KV *storage*
+    and translation shard).  ``state`` is the decode-state dict (arrays,
+    ShapeDtypeStructs or just its keys); ``spec`` a ``DecodeSpec``.
+
+    Used three ways, which MUST agree: device placement of the state,
+    the whole-step shard_map in/out specs, and the host-side delta-sync
+    scatter routing.
+    """
+    ma = spec.model_axis
+    table = {
+        "k_pool": P(None, ma),          # (L, pool_slots, bs, KV, hd)
+        "v_pool": P(None, ma),
+        "tar": P(None, ma, None),       # (G=1, n_sets_padded, assoc)
+        "sf": P(None, ma),              # (G=1, n_sets_padded)
+        "flex": P(None, ma),            # (G=1, vpn_padded)
+    }
+    return {k: table.get(k, P()) for k in state}
+
+
 # ------------------------------------------------------- activation pins
 
 def _pin_table(rules: ShardingRules):

@@ -46,19 +46,36 @@ def paged_attention_ref(q, k_pool, v_pool, slots, ctx_len, *,
     A query with extent 0 contributes l == 0 so the flash-decoding
     combine drops it exactly.
     """
+    k = gather_pool_blocks(k_pool, slots)               # (B, nblk, bs, KV, D)
+    v = gather_pool_blocks(v_pool, slots)
+    return paged_attention_blocks(q, k, v, slots, ctx_len,
+                                  tok_offset=tok_offset,
+                                  tok_stride=tok_stride,
+                                  block_tokens=block_tokens)
+
+
+def paged_attention_blocks(q, k, v, slots, ctx_len, *,
+                           tok_offset: int = 0, tok_stride: int = 1,
+                           block_tokens: int | None = None):
+    """``paged_attention_ref`` with the gather already done.
+
+    ``k``/``v`` are the PRE-GATHERED per-row blocks ``(B, nblk, bs, KV, D)``
+    — exactly ``gather_pool_blocks(pool, slots)``, or the sharded engine's
+    psum-reconstructed blocks (where a ``slots < 0`` row carries zeros
+    instead of the clamp-gathered slot-0 data; both are bitwise-safe, the
+    mask below NEG_INFs those scores before they contribute).  ``slots``
+    is still taken for the validity mask.
+    """
     squeeze = q.ndim == 3
     if squeeze:
         q = q[:, None]
     B, Q, H, D = q.shape
-    n_slots, bs, KV, _ = k_pool.shape
-    nblk = slots.shape[1]
+    nblk, bs, KV = k.shape[1], k.shape[2], k.shape[3]
     if block_tokens is None:
         block_tokens = bs
     g = H // KV
     scale = 1.0 / math.sqrt(D)
 
-    k = gather_pool_blocks(k_pool, slots)               # (B, nblk, bs, KV, D)
-    v = gather_pool_blocks(v_pool, slots)
     pos = (jnp.arange(nblk)[:, None] * block_tokens
            + tok_offset + jnp.arange(bs)[None, :] * tok_stride)  # (nblk, bs)
     if ctx_len.ndim == 1:

@@ -19,7 +19,18 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
-    """Small mesh over however many local devices exist (tests)."""
+    """Small mesh over however many local devices exist (tests).
+
+    Raises a clear error when the requested shape exceeds the local
+    device count instead of letting ``jax.make_mesh`` fail obscurely.
+    """
+    need, have = data * model, jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"mesh shape ({data}, {model}) needs {need} devices but only "
+            f"{have} are visible; on CPU set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=N before "
+            "importing jax (N >= data * model)")
     return jax.make_mesh((data, model), ("data", "model"),
                          axis_types=(AxisType.Auto,) * 2)
 

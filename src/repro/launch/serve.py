@@ -4,7 +4,7 @@
         --requests 8 --max-new 16 [--mode hybrid|flexible_only|restrictive_only] \\
         [--prefill-budget 128] [--scheduler fifo|spf|priority] \\
         [--temperature 0.8 --top-k 40 --top-p 0.95 --seed 0] \\
-        [--spec-decode --num-draft-tokens 4]
+        [--spec-decode --num-draft-tokens 4] [--data 1 --model 2]
 
 Drives the request-centric engine API: requests are submitted up front
 with per-request SamplingParams, the configured Scheduler admits them
@@ -59,6 +59,13 @@ def main() -> None:
                          "spec-off; recurrent families fall back)")
     ap.add_argument("--num-draft-tokens", type=int, default=4,
                     help="draft window width K (with --spec-decode)")
+    ap.add_argument("--data", type=int, default=1,
+                    help="mesh data-axis size (replicated engine state)")
+    ap.add_argument("--model", type=int, default=1,
+                    help="mesh model-axis size: shards the KV pool and "
+                         "TAR/SF/flex tables (DESIGN.md §sharded-serving)."
+                         " On CPU set XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N first")
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
 
@@ -78,7 +85,9 @@ def main() -> None:
         auto_release=True, scheduler=args.scheduler,
         prefill_mode=args.prefill_mode,
         spec_decode="ngram" if args.spec_decode else None,
-        num_draft_tokens=args.num_draft_tokens))
+        num_draft_tokens=args.num_draft_tokens,
+        mesh_shape=((args.data, args.model)
+                    if (args.data, args.model) != (1, 1) else None)))
     def sampling(sid):
         # distinct per-request PRNG streams: one shared seed would make
         # identical prompts produce identical "sampled" token streams
@@ -103,6 +112,8 @@ def main() -> None:
     steps = eng.step_count
     spec_note = (f", spec K={args.num_draft_tokens}" if eng.spec_K
                  else "")
+    if eng.mesh is not None:
+        spec_note += f", mesh=(data={args.data}, model={args.model})"
     print(f"arch={cfg.name} mode={args.mode} sched={args.scheduler}: "
           f"{args.requests} requests, {tokens} tokens in {dt:.2f}s "
           f"({tokens / dt:.1f} tok/s, {steps} engine steps, "

@@ -1,6 +1,7 @@
 from .decode import (DecodeSpec, make_decode_spec, make_serve_step,
                      init_decode_state, abstract_decode_state,
-                     decode_state_shardings)
+                     decode_state_shardings, translate_step,
+                     translate_step_sharded)
 from .engine import (ChunkRecord, Engine, EngineConfig, Request,
                      RequestOutput)
 from .sampling import SamplingParams
@@ -10,7 +11,8 @@ from .spec_decode import make_spec_decode_step, propose_ngram_drafts
 
 __all__ = ["DecodeSpec", "make_decode_spec", "make_serve_step",
            "init_decode_state", "abstract_decode_state",
-           "decode_state_shardings", "ChunkRecord", "Engine",
+           "decode_state_shardings", "translate_step",
+           "translate_step_sharded", "ChunkRecord", "Engine",
            "EngineConfig", "Request", "RequestOutput", "SamplingParams",
            "Scheduler", "FIFOScheduler", "ShortestPromptFirst",
            "PriorityAgingScheduler", "make_scheduler", "SCHEDULERS",

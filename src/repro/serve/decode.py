@@ -45,8 +45,12 @@ from repro.models import transformer as Tmod
 from repro.models.transformer import ModelDims
 from repro.models.ssm import MambaCache, mamba_decode_step
 from repro.models.moe import moe_decode
-from repro.core.tar_sf import RestSegState, rsw
-from repro.kernels.paged_attention.ref import paged_attention_ref
+from repro.core.tar_sf import RestSegState, rsw, probe_rows
+from repro.core.hashes import get_hash
+from repro.core.partition import Partition
+from repro.dist.sharding import kv_state_specs
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_attention_blocks)
 from .sampling import sample_tokens
 
 
@@ -69,6 +73,14 @@ class DecodeSpec:
     # kernels/paged_attention read merged by an online-softmax combine
     # (linear memory, kernel-ready; equal up to float associativity).
     prefix_gather: str = "exact"
+    # KV/translation sharding over the model axis (DESIGN.md
+    # §sharded-serving).  0 = legacy layout: mesh != None selects the
+    # token-split flash-decoding path (dryrun compile cells).  >= 1 = the
+    # SPMD engine layout: the pool is slot-sharded by the set-index /
+    # block-range Partition, the whole step runs under one shard_map, and
+    # every float op is replicated so streams stay bitwise identical to
+    # mesh=None.  Requires ``part`` to be passed to the step factories.
+    kv_shards: int = 0
 
     @property
     def nblk(self) -> int:
@@ -102,23 +114,38 @@ def make_decode_spec(cfg: ArchConfig, seq_len: int, batch: int,
 
 def abstract_decode_state(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                           batch: int, data_size: int,
-                          dtype=jnp.bfloat16) -> Dict[str, Any]:
-    """ShapeDtypeStruct pytree of the decode state (dry-run friendly)."""
+                          dtype=jnp.bfloat16,
+                          part: Optional[Partition] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct pytree of the decode state (dry-run friendly).
+
+    With ``part`` (the SPMD engine layout, ``spec.kv_shards >= 1``) the
+    pool and translation tables take the shard-padded sizes: every
+    shard's chunk is identically shaped, padded TAR rows stay zero and
+    padded flex entries -1, so the padded lookup is bit-identical to the
+    unpadded one.  ``data_size`` must be 1 in that layout (the data axis
+    replicates engine state; it scales *compute* only).
+    """
     sd = jax.ShapeDtypeStruct
     G = data_size
     n_attn = sum(cfg.attn_on_layer(l) for l in range(cfg.num_layers))
     n_ssm = cfg.num_layers - n_attn if cfg.family in ("hybrid", "ssm") else 0
     seqs_per_group = max(1, batch // G) if spec.mode == "batch" else batch
+    if part is not None and G != 1:
+        raise ValueError("sharded decode state requires data_size == 1")
     st: Dict[str, Any] = {}
     if n_attn:
-        pool = (n_attn, G * spec.slots_per_group, spec.block_size,
+        pool_slots = part.pool_slots if part is not None \
+            else G * spec.slots_per_group
+        pool = (n_attn, pool_slots, spec.block_size,
                 max(dims.n_kv, 1), dims.head_dim)
+        n_sets = part.n_sets_padded if part is not None else spec.n_sets
+        flex_len = part.vpn_padded if part is not None \
+            else seqs_per_group * spec.max_blocks_per_seq
         st["k_pool"] = sd(pool, dtype)
         st["v_pool"] = sd(pool, dtype)
-        st["tar"] = sd((G, spec.n_sets, spec.assoc), jnp.int32)
-        st["sf"] = sd((G, spec.n_sets), jnp.int32)
-        st["flex"] = sd((G, seqs_per_group * spec.max_blocks_per_seq),
-                        jnp.int32)
+        st["tar"] = sd((G, n_sets, spec.assoc), jnp.int32)
+        st["sf"] = sd((G, n_sets), jnp.int32)
+        st["flex"] = sd((G, flex_len), jnp.int32)
     if n_ssm:
         md = dims.mamba
         st["ssm"] = sd((n_ssm, batch, md.n_heads, md.head_dim, md.d_state),
@@ -140,8 +167,10 @@ def abstract_decode_state(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
     return st
 
 
-def init_decode_state(cfg, dims, spec, batch, data_size, dtype=jnp.float32):
-    abstract = abstract_decode_state(cfg, dims, spec, batch, data_size, dtype)
+def init_decode_state(cfg, dims, spec, batch, data_size, dtype=jnp.float32,
+                      part: Optional[Partition] = None):
+    abstract = abstract_decode_state(cfg, dims, spec, batch, data_size, dtype,
+                                     part=part)
     st = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), abstract)
     if "flex" in st:
         st["flex"] = st["flex"] - 1            # -1 = unmapped
@@ -233,16 +262,67 @@ def _hybrid_lookup(vpns: jax.Array, tar: jax.Array, sf: jax.Array,
             accesses.astype(jnp.int32))
 
 
-def translate_step(tar: jax.Array, sf: jax.Array, flex: jax.Array,
-                   positions: jax.Array, spec: DecodeSpec
-                   ) -> StepTranslation:
-    """Translate ALL block vpns of ALL groups once — the step's only
-    translation dispatch.
+def _hybrid_lookup_sharded(vpns: jax.Array, tar_l: jax.Array,
+                           sf_l: jax.Array, flex_l: jax.Array,
+                           hash_name: str, part: Partition,
+                           model_axis: str):
+    """Sharded hybrid lookup: probe the LOCAL table shards, psum-combine.
 
-    tar (G, n_sets, assoc), sf (G, n_sets), flex (G, seqs*nblk) are the
-    per-group translation structures; ``positions`` (B,) the pre-step
-    context lengths.  The current block's write-slot lookup is batched
-    into the same dispatch (it is just ``B_loc`` extra vpns).
+    Runs under shard_map over ``model_axis``: ``tar_l (spm, assoc)`` /
+    ``sf_l (spm,)`` are this shard's set-index range of the TAR/SF
+    tables, ``flex_l (vpm,)`` its vpn range of the flat flex table;
+    ``vpns`` is replicated.  Each shard probes only the queries whose
+    set (resp. vpn) it owns — contributions are combined with integer
+    psums, so the result is EXACTLY the global lookup (no float
+    reduction): bit-identical slots/telemetry to ``_hybrid_lookup`` on
+    the unsharded tables.  Padded TAR rows are all-zero (tags store
+    vpn+1, so 0 never matches) and padded flex entries -1, which is why
+    the clipped out-of-range probes below cannot spuriously hit.
+
+    Like ``_hybrid_lookup`` this is the ONLY translation primitive the
+    sharded decode step may touch, called exactly once per step (pinned
+    by tests/test_sharded_serve.py).
+    """
+    m = jax.lax.axis_index(model_axis)
+    spm = part.sets_per_shard
+    vpm = part.vpns_per_shard
+    set_g = get_hash(hash_name)(vpns.astype(jnp.int32),
+                                part.n_sets).astype(jnp.int32)
+    mine = (set_g // spm) == m
+    loc = jnp.clip(set_g - m * spm, 0, spm - 1)
+    l_hit, l_way, l_skip = probe_rows(tar_l[loc], sf_l[loc],
+                                      vpns.astype(jnp.int32))
+    hit = jax.lax.psum(
+        jnp.where(mine & l_hit, 1, 0), model_axis) > 0
+    way = jax.lax.psum(
+        jnp.where(mine & l_hit, l_way + 1, 0), model_axis) - 1
+    sf_skipped = jax.lax.psum(
+        jnp.where(mine, l_skip.astype(jnp.int32), 0), model_axis) > 0
+    mine_f = (vpns // vpm) == m
+    ent = flex_l[jnp.clip(vpns - m * vpm, 0, vpm - 1)]
+    # shift by 2 so both "not mine" (0) and "unmapped" (-1 -> 1) slot in
+    # below zero after the un-shift; exactly one shard owns each vpn
+    flex_slot = jax.lax.psum(
+        jnp.where(mine_f, ent + 2, 0), model_axis) - 2
+    slot = jnp.where(hit, set_g * part.assoc + jnp.maximum(way, 0),
+                     jnp.where(flex_slot >= 0, flex_slot, -1))
+    mapped = hit | (flex_slot >= 0)
+    accesses = (1 + jnp.where(sf_skipped, 0, 1)
+                + jnp.where(hit, 0, 1))
+    return (slot.astype(jnp.int32), hit, mapped,
+            accesses.astype(jnp.int32))
+
+
+def _translate_queries(lookup, tar: jax.Array, sf: jax.Array,
+                       flex: jax.Array, positions: jax.Array,
+                       spec: DecodeSpec) -> StepTranslation:
+    """Shared skeleton of the once-per-step translation dispatch.
+
+    Builds the per-group query grid (every block vpn of every sequence
+    plus the current write block), runs ``lookup(tar_g, sf_g, flex_g,
+    vpns)`` once over it, and packs the ``StepTranslation``.  The lookup
+    itself is injected so the single-device and sharded paths share one
+    skeleton while keeping separately pin-able primitives.
     """
     G = tar.shape[0]
     nblk = spec.max_blocks_per_seq
@@ -278,9 +358,7 @@ def translate_step(tar: jax.Array, sf: jax.Array, flex: jax.Array,
     queries = jnp.concatenate(
         [jnp.broadcast_to(grid.reshape(-1)[None, :], (G, n_read)), cur_vpn],
         axis=1)                                             # (G, n_read+B_loc)
-    slot, hit, mapped, acc = jax.vmap(
-        lambda t, s, f, v: _hybrid_lookup(v, t, s, f, spec.hash_name)
-    )(tar, sf, flex, queries)
+    slot, hit, mapped, acc = jax.vmap(lookup)(tar, sf, flex, queries)
 
     shape3 = (G, B_loc, nblk)
     return StepTranslation(
@@ -292,6 +370,40 @@ def translate_step(tar: jax.Array, sf: jax.Array, flex: jax.Array,
         accesses=acc[:, :n_read].reshape(shape3),
         vpns=grid,
     )
+
+
+def translate_step(tar: jax.Array, sf: jax.Array, flex: jax.Array,
+                   positions: jax.Array, spec: DecodeSpec
+                   ) -> StepTranslation:
+    """Translate ALL block vpns of ALL groups once — the step's only
+    translation dispatch.
+
+    tar (G, n_sets, assoc), sf (G, n_sets), flex (G, seqs*nblk) are the
+    per-group translation structures; ``positions`` (B,) the pre-step
+    context lengths.  The current block's write-slot lookup is batched
+    into the same dispatch (it is just ``B_loc`` extra vpns).
+    """
+    return _translate_queries(
+        lambda t, s, f, v: _hybrid_lookup(v, t, s, f, spec.hash_name),
+        tar, sf, flex, positions, spec)
+
+
+def translate_step_sharded(tar_l: jax.Array, sf_l: jax.Array,
+                           flex_l: jax.Array, positions: jax.Array,
+                           spec: DecodeSpec, part: Partition
+                           ) -> StepTranslation:
+    """Sharded translate-once dispatch (runs under shard_map).
+
+    Same contract as ``translate_step`` — one dispatch per step, LOGICAL
+    slot numbering in the returned ``StepTranslation`` (bit-identical to
+    ``mesh=None``) — but each shard probes only its own TAR/SF set range
+    and flex vpn range; integer psums combine the verdicts.
+    """
+    assert spec.mode == "batch", "sharded serving is batch-mode only"
+    return _translate_queries(
+        lambda t, s, f, v: _hybrid_lookup_sharded(
+            v, t, s, f, spec.hash_name, part, spec.model_axis),
+        tar_l, sf_l, flex_l, positions, spec)
 
 
 # ------------------------------------------------- paged attention (SPMD)
@@ -381,6 +493,66 @@ def _paged_attn_shardmap(q, k_new, v_new, k_pool_l, v_pool_l, slots, w_slot,
               pos)
 
 
+# ------------------------------------- slot-sharded pool (SPMD engine)
+
+def _psum_gather_blocks(pool_l, slots, part: Partition, model_axis: str):
+    """Gather blocks by LOGICAL slot from the slot-sharded pool, exactly.
+
+    Runs under shard_map over ``model_axis``: ``pool_l`` is this shard's
+    contiguous physical-slot chunk ``(slots_per_shard, bs, KV, hd)``;
+    ``slots`` the replicated logical slot ids (any leading shape, -1 =
+    unmapped).  Each shard gathers the blocks it owns, then an INTEGER
+    psum over the raw bits assembles the replicated result — float
+    psums would tie bit-identity to reduction order; bit psums of
+    disjoint one-hot contributions cannot.  Unowned / -1 rows contribute
+    zero bits, so missing slots come back as all-zero blocks (which the
+    valid-slot masking inside paged attention renders harmless).
+    """
+    m = jax.lax.axis_index(model_axis)
+    cps = part.slots_per_shard
+    phys = part.phys(slots)
+    mine = (slots >= 0) & ((phys // cps) == m)
+    g = pool_l[jnp.where(mine, phys - m * cps, 0)]
+    mask = mine.reshape(mine.shape + (1,) * (g.ndim - mine.ndim))
+    if g.dtype == jnp.float32:
+        bits = jax.lax.bitcast_convert_type(g, jnp.int32)
+        bits = jax.lax.psum(jnp.where(mask, bits, 0), model_axis)
+        return jax.lax.bitcast_convert_type(bits, jnp.float32)
+    # 16-bit dtypes (bf16/f16): widen the bit pattern to int32 for psum
+    bits = jax.lax.bitcast_convert_type(g, jnp.uint16).astype(jnp.int32)
+    bits = jax.lax.psum(jnp.where(mask, bits, 0), model_axis)
+    return jax.lax.bitcast_convert_type(bits.astype(jnp.uint16), g.dtype)
+
+
+def _paged_attn_shard_local(q, k_new, v_new, kp_l, vp_l,
+                            trans: StepTranslation, pos,
+                            spec: DecodeSpec, part: Partition):
+    """Slot-sharded write + paged attention (runs under shard_map).
+
+    The sharded twin of ``_paged_attn_local_ref``: the current token's
+    K/V scatter is ownership-masked (only the shard owning the physical
+    slot writes; everyone else drops out of bounds), the block gather is
+    the exact bit-psum assembly, and the attention math itself is the
+    SAME replicated ``paged_attention_blocks`` — bitwise identical
+    output to the mesh-free reference.
+    """
+    m = jax.lax.axis_index(spec.model_axis)
+    cps = part.slots_per_shard
+    slots = trans.slots[0]                          # (B, nblk) logical
+    w_slot, w_valid = trans.w_slot[0], trans.w_valid[0]
+    t = pos % spec.block_size
+    wp = part.phys(w_slot)
+    mine_w = w_valid & ((wp // cps) == m)
+    ws = jnp.where(mine_w, wp - m * cps, cps)       # unowned -> dropped
+    kp_l = kp_l.at[ws, t].set(k_new.astype(kp_l.dtype), mode="drop")
+    vp_l = vp_l.at[ws, t].set(v_new.astype(vp_l.dtype), mode="drop")
+    k = _psum_gather_blocks(kp_l, slots, part, spec.model_axis)
+    v = _psum_gather_blocks(vp_l, slots, part, spec.model_axis)
+    o, mx, l = paged_attention_blocks(q, k, v, slots, pos + 1)
+    out = (o / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+    return out, kp_l, vp_l
+
+
 # ---------------------------------------------- shared decode sublayers
 #
 # One definition each for the pieces the scalar decode step and the
@@ -440,9 +612,17 @@ def project_logits(params, x, cfg: ArchConfig, dims: ModelDims, pins
 
 def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                     mesh: Optional[Mesh] = None, pins=Lmod.no_pins,
-                    dtype=jnp.bfloat16):
+                    dtype=jnp.bfloat16, part: Optional[Partition] = None):
     """Returns serve_step(params, dstate, tokens (B,)) ->
     (logits (B, V), new dstate, stats).  One new token per live sequence.
+
+    With ``mesh`` and ``spec.kv_shards >= 1`` (+ ``part``, the engine's
+    SPMD layout) the WHOLE step body runs under one shard_map over the
+    mesh: translation probes per-shard table ranges, the KV pool is
+    slot-sharded, and all float compute is replicated — token streams
+    stay bitwise identical to ``mesh=None`` (DESIGN.md
+    §sharded-serving).  With ``kv_shards == 0`` a mesh selects the
+    legacy token-split flash-decoding path (dryrun compile cells).
 
     ``stats`` carries the step's translation telemetry (``in_rest`` /
     ``accesses`` / ``mapped`` / ``slots``, all group-major) plus the
@@ -475,10 +655,17 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                                 cfg.rope_theta)[:, 0]
         return q, k, v
 
+    sharded = mesh is not None and spec.kv_shards >= 1
+    if sharded and part is None:
+        raise ValueError("spec.kv_shards >= 1 requires a Partition")
+
     def attn_sublayer(blk, x, kp_l, vp_l, trans, positions):
         B = x.shape[0]
         q, k, v = qkv_decode(blk, x, positions)
-        if mesh is not None:
+        if sharded:
+            out, kp_l, vp_l = _paged_attn_shard_local(
+                q, k, v, kp_l, vp_l, trans, positions, spec, part)
+        elif mesh is not None:
             out, kp_l, vp_l = _paged_attn_shardmap(
                 q, k, v, kp_l, vp_l, trans.slots, trans.w_slot,
                 trans.w_valid, positions,
@@ -516,8 +703,13 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
         # ---- the step's single translation dispatch ----------------------
         trans = None
         if n_attn:
-            trans = translate_step(dstate["tar"], dstate["sf"],
-                                   dstate["flex"], positions, spec)
+            if sharded:
+                trans = translate_step_sharded(
+                    dstate["tar"], dstate["sf"], dstate["flex"],
+                    positions, spec, part)
+            else:
+                trans = translate_step(dstate["tar"], dstate["sf"],
+                                       dstate["flex"], positions, spec)
             # group-major view of the active mask gates the KV write
             G = dstate["tar"].shape[0]
             if spec.mode == "batch":
@@ -648,7 +840,26 @@ def make_serve_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                                 + act.astype(dstate["ctx_len"].dtype))
         return logits, new_state, stats
 
-    return serve_step
+    if not sharded:
+        return serve_step
+
+    def serve_step_sharded(params, dstate, tokens, active=None, *,
+                           sample=False):
+        # the whole step under ONE shard_map: params and batch arrays
+        # replicated (P() prefix-broadcasts over the pytrees), decode
+        # state per kv_state_specs.  ``sample`` is trace-static, so the
+        # shard_map is (re)built per sample value under the engine's
+        # static_argnames jit — same retrace behaviour as the local step.
+        act = (jnp.ones_like(dstate["ctx_len"], jnp.bool_) if active is None
+               else active.astype(jnp.bool_))
+        sspecs = kv_state_specs(dstate, spec)
+        fn = jax.shard_map(
+            functools.partial(serve_step, sample=sample),
+            mesh=mesh, in_specs=(P(), sspecs, P(), P()),
+            out_specs=(P(), sspecs, P()), check_vma=False)
+        return fn(params, dstate, tokens, act)
+
+    return serve_step_sharded
 
 
 # ------------------------------------------------ single-device reference

@@ -92,9 +92,12 @@ from typing import Any, Dict, List, NamedTuple, Optional, Tuple
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
-from repro.core import HybridConfig, HybridKVManager, PoolExhausted, SWAP
+from repro.core import (HybridConfig, HybridKVManager, Partition,
+                        PoolExhausted, SWAP)
+from repro.dist.sharding import kv_state_specs
 from repro.models import FwdOptions, model_dims
 from .decode import DecodeSpec, make_serve_step, init_decode_state
 from .prefill import make_prefill_step, make_prefix_prefill_step
@@ -190,6 +193,15 @@ class EngineConfig:
     # a runtime.fault.ServeFaultInjector (or None): forced allocation
     # failures and preemptions for the chaos suite
     fault_injector: Any = None
+    # SPMD serving (DESIGN.md §sharded-serving): ``(data, model)`` builds
+    # a local mesh; the KV pool and TAR/SF/flex tables shard over the
+    # model axis (set-index / block-range partitioning), every step runs
+    # once per shard under one shard_map, and token streams stay bitwise
+    # identical to ``mesh_shape=None``.  The data axis replicates the
+    # engine state (it scales compute only, so data > 1 requires no
+    # state changes).  None = the single-device engine, trace-identical
+    # to every pre-SPMD release.
+    mesh_shape: Optional[Tuple[int, int]] = None
 
 
 class ChunkRecord(NamedTuple):
@@ -384,15 +396,30 @@ class Engine:
                 f"prefill_mode='recompute' for attn_impl="
                 f"{config.attn_impl!r}", stacklevel=2)
             self.prefill_mode = "recompute"
+        # ---- SPMD mesh / partition (DESIGN.md §sharded-serving) ---------
+        self.mesh = None
+        self.partition: Optional[Partition] = None
+        kv_shards = 0
+        if config.mesh_shape is not None:
+            from repro.launch.mesh import make_local_mesh
+            data, model = config.mesh_shape
+            self.mesh = make_local_mesh(data=data, model=model)
+            # kv_shards >= 1 selects the SPMD layout even at model == 1
+            # (same code path regardless of shard count); the data axis
+            # replicates state, so the partition covers the model axis
+            kv_shards = int(model)
+            self.partition = Partition.for_hybrid(self.hybrid_cfg, model)
+            self.manager.set_partition(self.partition)
         self.spec = DecodeSpec(
             block_size=bs, max_blocks_per_seq=max_blocks,
             slots_per_group=self.hybrid_cfg.total_slots,
             n_sets=self.hybrid_cfg.num_sets, assoc=self.hybrid_cfg.assoc,
             mode="batch", hash_name=self.hybrid_cfg.hash_name,
-            prefix_gather=config.prefix_gather)
+            prefix_gather=config.prefix_gather, kv_shards=kv_shards)
         dtype = config.dtype
         self.dstate = init_decode_state(cfg, self.dims, self.spec,
-                                        max_batch, 1, dtype=dtype)
+                                        max_batch, 1, dtype=dtype,
+                                        part=self.partition)
         self.max_batch = max_batch
         # tokens of NEW prompt admitted per step; chunk granularity is the
         # KV block, so the effective budget is floor(budget / bs) blocks
@@ -415,6 +442,12 @@ class Engine:
         self._preempted: Dict[int, _HostTierSeq] = {}
         self._swap_bytes_out = 0
         self._swap_bytes_in = 0
+        # per-shard swap traffic (mesh only): KV bytes attributed to the
+        # shard owning each swapped block, non-pool rows to shard 0 —
+        # the shard rows sum EXACTLY to the global counters
+        n_sh = self.partition.n_shards if self.partition else 1
+        self._shard_swap_out = np.zeros(n_sh, np.int64)
+        self._shard_swap_in = np.zeros(n_sh, np.int64)
         # monotone count of preempt/resume events: poll()'s no-progress
         # detector treats any of them as progress (a step that only
         # rearranges residency is not a stuck step)
@@ -438,18 +471,21 @@ class Engine:
         # / any-sampled); the all-greedy one is the pre-sampling argmax
         # hot path, with no sort/softmax/gumbel in the trace
         self._serve_step = jax.jit(make_serve_step(
-            cfg, self.dims, self.spec, mesh=None, dtype=dtype),
+            cfg, self.dims, self.spec, mesh=self.mesh, dtype=dtype,
+            part=self.partition),
             static_argnames=("sample",))
         # one jitted callable; XLA re-specializes per (bucket_B, bucket_S)
         # — both power-of-two padded, so the executable set is bounded
         self._prefill_step = jax.jit(make_prefill_step(
-            cfg, self.dims, self.spec, mesh=None, fwd=self.fwd),
+            cfg, self.dims, self.spec, mesh=self.mesh, fwd=self.fwd,
+            part=self.partition),
             static_argnames=("sample",))
         # prefix-KV chunk step: chunks k > 0 forward only their own tokens
         # and read the prefix from the pool (shapes keyed additionally by
         # the pow2 prefix-buffer width — still a bounded set)
         self._prefix_step = jax.jit(make_prefix_prefill_step(
-            cfg, self.dims, self.spec, mesh=None, fwd=self.fwd),
+            cfg, self.dims, self.spec, mesh=self.mesh, fwd=self.fwd,
+            part=self.partition),
             static_argnames=("sample",))
         # ---- speculative decoding (serve/spec_decode.py) ----------------
         sd = config.spec_decode
@@ -476,8 +512,9 @@ class Engine:
                                      f"{config.spec_ngram}")
                 self.spec_K = int(config.num_draft_tokens)
                 self._spec_step = jax.jit(make_spec_decode_step(
-                    cfg, self.dims, self.spec, self.spec_K, mesh=None,
-                    dtype=dtype, ngram=config.spec_ngram),
+                    cfg, self.dims, self.spec, self.spec_K, mesh=self.mesh,
+                    dtype=dtype, ngram=config.spec_ngram,
+                    part=self.partition),
                     static_argnames=("sample",))
                 # per-slot token history the in-graph drafter matches
                 # against (prompt scattered at admission, accepted tokens
@@ -486,6 +523,20 @@ class Engine:
                     (max_batch, max_seq_len), -1, jnp.int32)
         self._spec_drafted = 0
         self._spec_accepted = 0
+        # mesh layout: place the decode state per the SAME specs the
+        # whole-step shard_map uses (they must agree — kv_state_specs is
+        # the single source of truth) and replicate the params; route
+        # dirty-delta syncs through the ownership-masked sharded scatter
+        if self.mesh is not None:
+            specs = kv_state_specs(self.dstate, self.spec)
+            self.dstate = {
+                k: jax.device_put(v, NamedSharding(self.mesh, specs[k]))
+                for k, v in self.dstate.items()}
+            self.params = jax.device_put(
+                self.params, NamedSharding(self.mesh, P()))
+            self._scatter_delta = self._make_sharded_scatter()
+        else:
+            self._scatter_delta = _scatter_delta
         self.requests: Dict[int, Request] = {}      # registered, live
         self.finished: Dict[int, Request] = {}
         self._states: Dict[int, RequestState] = {}
@@ -854,6 +905,21 @@ class Engine:
                                     if self._states[sid].done),
             preempted=len(self._preempted))
 
+    def _attribute_swap(self, counter: np.ndarray, rec, slots) -> None:
+        """Split a swap record's bytes across shards so the per-shard
+        counters sum EXACTLY to the global one: KV bytes go to each
+        block's owning shard (equal share per block — blocks are
+        uniform), everything else (recurrent/cross rows, spec history)
+        is replicated state and is charged to shard 0."""
+        kv_bytes = 0 if rec.kv is None else int(np.asarray(rec.kv).nbytes)
+        if kv_bytes and slots:
+            per, extra = divmod(kv_bytes, len(slots))
+            for i, s in enumerate(slots):
+                owner = (self.partition.shard_of_slot(int(s))
+                         if self.partition is not None else 0)
+                counter[owner] += per + (extra if i == 0 else 0)
+        counter[0] += rec.nbytes - kv_bytes
+
     def preempt_request(self, seq_id: int) -> None:
         """Swap a live sequence out to the host KV tier (ISSUE 6).
 
@@ -884,7 +950,10 @@ class Engine:
                 if bslot >= 0:
                     mapped.append(bslot)
             if mapped:
-                sl = jnp.asarray(mapped, jnp.int32)
+                mp = np.asarray(mapped, np.int32)
+                if self.partition is not None:
+                    mp = self.partition.phys(mp)
+                sl = jnp.asarray(mp)
                 fetch["kv"] = jnp.stack([self.dstate["k_pool"][:, sl],
                                          self.dstate["v_pool"][:, sl]])
         for key in ("ssm", "conv", "cross_k", "cross_v"):
@@ -915,6 +984,7 @@ class Engine:
                               if r.seq_id != seq_id]
         self._preempted[seq_id] = rec
         self._swap_bytes_out += rec.nbytes
+        self._attribute_swap(self._shard_swap_out, rec, mapped)
         st.preempts += 1
         self._progress_events += 1
         self.scheduler.add(req, st.arrival)
@@ -954,8 +1024,11 @@ class Engine:
             # re-resolve AFTER the copies: a later block's allocation may
             # have evict-migrated an earlier one within this same resume,
             # so the scatter must target where each block lives now
-            dst = jnp.asarray([m.lookup(sid, b)[0] for b, _ in rec.blocks],
-                              jnp.int32)
+            dh = np.asarray([m.lookup(sid, b)[0] for b, _ in rec.blocks],
+                            np.int32)
+            if self.partition is not None:
+                dh = self.partition.phys(dh)
+            dst = jnp.asarray(dh)
             kv = jnp.asarray(rec.kv)
             self.dstate["k_pool"] = \
                 self.dstate["k_pool"].at[:, dst].set(kv[0])
@@ -979,6 +1052,9 @@ class Engine:
             self._current = req
         del self._preempted[sid]
         self._swap_bytes_in += rec.nbytes
+        self._attribute_swap(
+            self._shard_swap_in, rec,
+            [m.lookup(sid, b)[0] for b, _ in rec.blocks])
         st.last_step = self._step_count
         self._progress_events += 1
         return True
@@ -1286,19 +1362,76 @@ class Engine:
             self._finish(st, "stop" if hit_eos else "length")
 
     # ------------------------------------------------------------- serving
+    def _make_sharded_scatter(self):
+        """Build the mesh twin of ``_scatter_delta``: one jitted
+        shard_map in which each shard keeps ONLY the delta entries whose
+        set index (resp. flex vpn) falls in its own range, rebases them,
+        and drops the rest out of bounds — dirty deltas are routed to the
+        owning shard and nowhere else (DESIGN.md §sharded-serving).  The
+        caller's out-of-bounds sentinels (padded device sizes) fall
+        outside every shard's range, so an empty delta side still costs
+        one dropped row, exactly like the local path."""
+        part, spec = self.partition, self.spec
+        spm, vpm = part.sets_per_shard, part.vpns_per_shard
+        ma = spec.model_axis
+
+        def local(tar, sf, flex, sets_idx, tar_rows, sf_rows, flex_idx,
+                  flex_vals):
+            mi = jax.lax.axis_index(ma)
+            lo = (mi * spm).astype(sets_idx.dtype)
+            si = jnp.where((sets_idx >= lo) & (sets_idx < lo + spm),
+                           sets_idx - lo, spm)
+            tar = tar.at[0, si].set(tar_rows, mode="drop")
+            sf = sf.at[0, si].set(sf_rows, mode="drop")
+            flo = (mi * vpm).astype(flex_idx.dtype)
+            fi = jnp.where((flex_idx >= flo) & (flex_idx < flo + vpm),
+                           flex_idx - flo, vpm)
+            flex = flex.at[0, fi].set(flex_vals, mode="drop")
+            return tar, sf, flex
+
+        fn = jax.shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(None, ma, None), P(None, ma), P(None, ma),
+                      P(), P(), P(), P(), P()),
+            out_specs=(P(None, ma, None), P(None, ma), P(None, ma)),
+            check_vma=False)
+        return jax.jit(fn)
+
     def _sync_translation(self, full: bool = False) -> None:
         """Upload TAR/SF/flex changes.
 
         First call (or ``full=True``) uploads everything; afterwards only
         the entries dirtied since the previous sync are scattered — three
         bounded-size dispatches instead of re-streaming the whole tables.
+        Under the mesh layout the full upload builds the PADDED mirrors
+        (zero TAR rows / -1 flex entries past the real sizes) and places
+        them with the state's shardings; deltas go through the
+        ownership-routed sharded scatter.
         """
         m = self.manager
         if full or not self._synced_full:
             m.take_dirty()             # everything is covered below
-            self.dstate["tar"] = jnp.asarray(m.tar)[None]
-            self.dstate["sf"] = jnp.asarray(m.sf)[None]
-            self.dstate["flex"] = jnp.asarray(m.flex_table.reshape(-1))[None]
+            part = self.partition
+            if part is None:
+                self.dstate["tar"] = jnp.asarray(m.tar)[None]
+                self.dstate["sf"] = jnp.asarray(m.sf)[None]
+                self.dstate["flex"] = jnp.asarray(
+                    m.flex_table.reshape(-1))[None]
+            else:
+                tar_h = np.zeros((part.n_sets_padded,) + m.tar.shape[1:],
+                                 m.tar.dtype)
+                tar_h[:m.tar.shape[0]] = m.tar
+                sf_h = np.zeros(part.n_sets_padded, m.sf.dtype)
+                sf_h[:m.sf.shape[0]] = m.sf
+                flat = m.flex_table.reshape(-1)
+                flex_h = np.full(part.vpn_padded, -1, flat.dtype)
+                flex_h[:flat.size] = flat
+                specs = kv_state_specs(self.dstate, self.spec)
+                put = lambda k, a: jax.device_put(
+                    a, NamedSharding(self.mesh, specs[k]))
+                self.dstate["tar"] = put("tar", tar_h[None])
+                self.dstate["sf"] = put("sf", sf_h[None])
+                self.dstate["flex"] = put("flex", flex_h[None])
             self._synced_full = True
             return
         sets, flex_idx = m.take_dirty()
@@ -1321,8 +1454,16 @@ class Engine:
         else:
             flex_idx = np.asarray([flat.size], np.int64)
             flex_vals = np.zeros(1, flat.dtype)
+        if self.partition is not None:
+            # sentinels must be out of bounds for the PADDED device
+            # tables: the unpadded flex size can alias a padded position
+            # (which must stay -1) and must not be written.
+            sets = np.where(sets == m.tar.shape[0],
+                            self.dstate["tar"].shape[1], sets)
+            flex_idx = np.where(flex_idx == flat.size,
+                                self.dstate["flex"].shape[1], flex_idx)
         self.dstate["tar"], self.dstate["sf"], self.dstate["flex"] = \
-            _scatter_delta(
+            self._scatter_delta(
                 self.dstate["tar"], self.dstate["sf"], self.dstate["flex"],
                 jnp.asarray(sets), jnp.asarray(tar_rows),
                 jnp.asarray(sf_rows), jnp.asarray(flex_idx),
@@ -1350,6 +1491,12 @@ class Engine:
                         pairs[0][0])
         src = _pad_pow2(np.asarray([s for _, s in pairs], np.int32),
                         pairs[0][1])
+        if self.partition is not None:
+            # manager slots are logical; the sharded pool is laid out in
+            # shard-contiguous physical order.  GSPMD turns this into the
+            # exact cross-shard data movement.
+            dst = self.partition.phys(dst)
+            src = self.partition.phys(src)
         dst, src = jnp.asarray(dst), jnp.asarray(src)
         for key in ("k_pool", "v_pool"):
             pool = self.dstate[key]
@@ -1696,4 +1843,41 @@ class Engine:
                   "swap_faults": st.swap_faults, "drafted": st.drafted,
                   "accepted": st.accepted}
             for sid, st in self._states.items()}
+        if self.partition is not None:
+            # per-shard view: each key sums EXACTLY to its global above
+            # (shared mutation sites, not post-hoc reconciliation).
+            # Spec counters describe replicated compute, charged to
+            # shard 0 — NOT scaled by the shard count.
+            s["shards"] = [
+                {"rsw_hits": int(ss.get("rsw_hits", 0)),
+                 "flex_walks": int(ss.get("flex_walks", 0)),
+                 "swap_bytes_out": int(self._shard_swap_out[i]),
+                 "swap_bytes_in": int(self._shard_swap_in[i]),
+                 "spec_drafted": self._spec_drafted if i == 0 else 0,
+                 "spec_accepted": self._spec_accepted if i == 0 else 0}
+                for i, ss in enumerate(self.manager.shard_stats)]
         return s
+
+    def check_invariants(self) -> None:
+        """Engine-level oracle on top of the manager's: the device
+        translation mirrors must equal the host tables (with zeroed /
+        -1 padding past the real sizes under the mesh layout), and the
+        per-shard swap-byte attribution must sum exactly to the global
+        swap counters."""
+        self.manager.check_invariants()
+        m = self.manager
+        tar = np.asarray(jax.device_get(self.dstate["tar"]))[0]
+        sf = np.asarray(jax.device_get(self.dstate["sf"]))[0]
+        flex = np.asarray(jax.device_get(self.dstate["flex"]))[0]
+        n_sets, flat = m.tar.shape[0], m.flex_table.reshape(-1)
+        assert (tar[:n_sets] == m.tar).all(), "device TAR != host TAR"
+        assert (sf[:n_sets] == m.sf).all(), "device SF != host SF"
+        assert (flex[:flat.size] == flat).all(), "device flex != host flex"
+        if self.partition is not None:
+            assert (tar[n_sets:] == 0).all(), "padded TAR rows dirtied"
+            assert (sf[n_sets:] == 0).all(), "padded SF rows dirtied"
+            assert (flex[flat.size:] == -1).all(), "padded flex dirtied"
+            assert int(self._shard_swap_out.sum()) == self._swap_bytes_out, \
+                "per-shard swap-out bytes != global"
+            assert int(self._shard_swap_in.sum()) == self._swap_bytes_in, \
+                "per-shard swap-in bytes != global"

@@ -52,6 +52,7 @@ continuous batching (ISSUE 2's headline bug).
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
@@ -66,9 +67,12 @@ from repro.models import layers as Lmod
 from repro.models.layers import no_pins
 from repro.models.ssm import MambaCache, mamba_forward
 from repro.models.transformer import ModelDims, _ffn, hybrid_ffn_select
+from repro.core.partition import Partition
+from repro.dist.sharding import kv_state_specs
 from repro.kernels.paged_attention.ref import (gather_pool_blocks,
-                                               paged_attention_ref)
-from .decode import DecodeSpec
+                                               paged_attention_ref,
+                                               paged_attention_blocks)
+from .decode import DecodeSpec, _psum_gather_blocks
 from .sampling import sample_tokens
 
 
@@ -99,17 +103,38 @@ def _scatter_pool(pool, cache, slots, mesh: Mesh, spec: DecodeSpec):
 
 # --------------------------------------------------- shared install logic
 
-def _install_kv(spec, mesh, dstate, new_state, caches, eff_slots, B):
+def _install_kv(spec, mesh, dstate, new_state, caches, eff_slots, B,
+                part: Optional[Partition] = None):
     """Scatter per-layer chunk K/V (L, B, S, KV, hd) into the pool at
     ``eff_slots`` (B, nblk); -1 entries (pads / already-installed /
-    shared blocks) are dropped, never clamped."""
+    shared blocks) are dropped, never clamped.
+
+    With ``part`` (running under the SPMD engine's whole-step shard_map)
+    the scatter is ownership-masked: each shard converts the logical
+    slots to physical, keeps only the ones inside its own chunk, and
+    drops the rest out of bounds — installs route only to the owning
+    shard, bitwise the same blocks the local path writes.
+    """
     k, v = caches["k"], caches["v"]              # (L_attn, B, S_tot, KV, hd)
     L, _, S_tot, KV, hd = k.shape
     bs = spec.block_size
     nblk = S_tot // bs
     k = k.reshape(L, B, nblk, bs, KV, hd)
     v = v.reshape(L, B, nblk, bs, KV, hd)
-    if mesh is not None:
+    if part is not None:
+        m = jax.lax.axis_index(spec.model_axis)
+        cps = part.slots_per_shard
+        sl = eff_slots.reshape(-1)
+        ph = part.phys(sl)
+        mine = (sl >= 0) & ((ph // cps) == m)
+        idx = jnp.where(mine, ph - m * cps, dstate["k_pool"].shape[1])
+        new_state["k_pool"] = dstate["k_pool"].at[:, idx].set(
+            k.reshape(L, B * nblk, bs, KV, hd
+                      ).astype(dstate["k_pool"].dtype), mode="drop")
+        new_state["v_pool"] = dstate["v_pool"].at[:, idx].set(
+            v.reshape(L, B * nblk, bs, KV, hd
+                      ).astype(dstate["v_pool"].dtype), mode="drop")
+    elif mesh is not None:
         con = NamedSharding(mesh, P(None, spec.data_axes, None,
                                     spec.model_axis, None, None))
         k = jax.lax.with_sharding_constraint(k, con)
@@ -169,14 +194,23 @@ def _first_token_stats(dstate, last, sid, ctx, n_slots, sample):
 
 def make_prefill_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
                       mesh: Optional[Mesh] = None, pins=no_pins,
-                      fwd: FwdOptions = FwdOptions()):
+                      fwd: FwdOptions = FwdOptions(),
+                      part: Optional[Partition] = None):
     """Returns prefill_step(params, dstate, batch, slots, slot_ids, ctx,
     last_pos) -> (last_logits (B, V), new dstate, stats).
 
     ``stats["next_token"]`` is the first generated token per row, computed
-    in-graph (see ``_first_token_stats``).
+    in-graph (see ``_first_token_stats``).  With ``spec.kv_shards >= 1``
+    (+ ``part``) the whole step runs under one shard_map over ``mesh``:
+    the forward is replicated, only the pool scatter is ownership-routed
+    (DESIGN.md §sharded-serving) — logits and installed blocks stay
+    bitwise identical to ``mesh=None``.
     """
     fwd_collect = FwdOptions(**{**fwd.__dict__, "collect_cache": True})
+    sharded = mesh is not None and spec.kv_shards >= 1
+    if sharded and part is None:
+        raise ValueError("spec.kv_shards >= 1 requires a Partition")
+    part_in = part if sharded else None
 
     def prefill_step(params, dstate, batch, slots, slot_ids, ctx, last_pos,
                      *, sample=False):
@@ -191,8 +225,8 @@ def make_prefill_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
 
         if caches.get("k") is not None and "k_pool" in dstate:
             eff_slots = jnp.where(row_ok[:, None], slots, -1)
-            _install_kv(spec, mesh, dstate, new_state, caches,
-                        eff_slots, B)
+            _install_kv(spec, None if sharded else mesh, dstate, new_state,
+                        caches, eff_slots, B, part=part_in)
         if "ssm" in dstate and caches.get("ssm") is not None:
             _install_recurrent(dstate, new_state, caches["ssm"], sid, B)
         if cfg.is_encoder_decoder and "cross_k" in dstate:
@@ -211,7 +245,19 @@ def make_prefill_step(cfg: ArchConfig, dims: ModelDims, spec: DecodeSpec,
         stats = _first_token_stats(dstate, last, sid, ctx, n_slots, sample)
         return last, new_state, stats
 
-    return prefill_step
+    if not sharded:
+        return prefill_step
+
+    def prefill_step_sharded(params, dstate, batch, slots, slot_ids, ctx,
+                             last_pos, *, sample=False):
+        sspecs = kv_state_specs(dstate, spec)
+        fn = jax.shard_map(
+            functools.partial(prefill_step, sample=sample),
+            mesh=mesh, in_specs=(P(), sspecs) + (P(),) * 5,
+            out_specs=(P(), sspecs, P()), check_vma=False)
+        return fn(params, dstate, batch, slots, slot_ids, ctx, last_pos)
+
+    return prefill_step_sharded
 
 
 # ---------------------------------------------------- prefix-KV chunk step
@@ -220,7 +266,8 @@ def make_prefix_prefill_step(cfg: ArchConfig, dims: ModelDims,
                              spec: DecodeSpec,
                              mesh: Optional[Mesh] = None, pins=no_pins,
                              fwd: FwdOptions = FwdOptions(),
-                             gather: Optional[str] = None):
+                             gather: Optional[str] = None,
+                             part: Optional[Partition] = None):
     """Chunk-k (k > 0) prefill: forward ONLY the chunk's new tokens.
 
     Returns prefix_prefill_step(params, dstate, batch, new_slots,
@@ -251,14 +298,21 @@ def make_prefix_prefill_step(cfg: ArchConfig, dims: ModelDims,
     online-softmax combine — O(chunk) memory and kernel-ready, equal to
     "exact" up to float associativity.
     """
-    if mesh is not None:
+    sharded = mesh is not None and spec.kv_shards >= 1
+    if mesh is not None and not sharded:
         raise NotImplementedError(
             "prefix-KV prefill is single-host for now; the SPMD admission "
             "path (ROADMAP) still drives the recompute prefill")
+    if sharded and part is None:
+        raise ValueError("spec.kv_shards >= 1 requires a Partition")
     if gather is None:
         gather = spec.prefix_gather
     if gather not in ("exact", "paged"):
         raise ValueError(f"unknown prefix gather impl {gather!r}")
+    if sharded and spec.use_kernels:
+        raise NotImplementedError(
+            "Pallas prefix gather is single-device; the sharded engine "
+            "drives the ref path")
     opt = fwd
     bs = spec.block_size
     fam = cfg.family
@@ -267,7 +321,16 @@ def make_prefix_prefill_step(cfg: ArchConfig, dims: ModelDims,
         B, S, H, hd = q.shape
         KV = k_new.shape[2]
         if gather == "paged":
-            if spec.use_kernels:
+            if sharded:
+                # exact bit-psum assembly of the owned blocks, then the
+                # SAME replicated Q>1 attention math
+                gk = _psum_gather_blocks(kp_l, prefix_slots, part,
+                                         spec.model_axis)
+                gv = _psum_gather_blocks(vp_l, prefix_slots, part,
+                                         spec.model_axis)
+                pool = paged_attention_blocks(q, gk, gv, prefix_slots,
+                                              prefix_ctx)
+            elif spec.use_kernels:
                 from repro.kernels.paged_attention.paged_attention import (
                     paged_attention_pallas)
                 # interpret mode, stated explicitly: lowering the Pallas
@@ -284,8 +347,17 @@ def make_prefix_prefill_step(cfg: ArchConfig, dims: ModelDims,
         # block positions and run the recompute forward's own softmax
         nblk_buf = prefix_slots.shape[1]
         nblk_chunk = S // bs
-        gk = gather_pool_blocks(kp_l, prefix_slots)   # (B, nbuf, bs, KV, hd)
-        gv = gather_pool_blocks(vp_l, prefix_slots)
+        if sharded:
+            # missing (-1) blocks come back all-zero from the bit-psum
+            # gather; the ok-mask below zeroes them again (idempotent),
+            # so this is bitwise the clamp-gather + mask of mesh=None
+            gk = _psum_gather_blocks(kp_l, prefix_slots, part,
+                                     spec.model_axis)
+            gv = _psum_gather_blocks(vp_l, prefix_slots, part,
+                                     spec.model_axis)
+        else:
+            gk = gather_pool_blocks(kp_l, prefix_slots)  # (B,nbuf,bs,KV,hd)
+            gv = gather_pool_blocks(vp_l, prefix_slots)
         ok = (prefix_slots >= 0)[..., None, None, None]
         gk = jnp.where(ok, gk, 0.0).astype(k_new.dtype)
         gv = jnp.where(ok, gv, 0.0).astype(v_new.dtype)
@@ -434,8 +506,8 @@ def make_prefix_prefill_step(cfg: ArchConfig, dims: ModelDims,
         new_state = dict(dstate)
         if caches.get("k") is not None and "k_pool" in dstate:
             eff_slots = jnp.where(row_ok[:, None], new_slots, -1)
-            _install_kv(spec, mesh, dstate, new_state, caches,
-                        eff_slots, B)
+            _install_kv(spec, None, dstate, new_state, caches,
+                        eff_slots, B, part=part if sharded else None)
         if "ssm" in dstate and caches.get("ssm") is not None:
             _install_recurrent(dstate, new_state, caches["ssm"], sid, B)
         # no cross install: chunk 0 (recompute) ran the encoder and
@@ -453,4 +525,18 @@ def make_prefix_prefill_step(cfg: ArchConfig, dims: ModelDims,
         stats = _first_token_stats(dstate, last, sid, ctx, n_slots, sample)
         return last, new_state, stats
 
-    return prefix_prefill_step
+    if not sharded:
+        return prefix_prefill_step
+
+    def prefix_step_sharded(params, dstate, batch, new_slots, prefix_slots,
+                            slot_ids, ctx, prefix_ctx, last_pos, *,
+                            sample=False):
+        sspecs = kv_state_specs(dstate, spec)
+        fn = jax.shard_map(
+            functools.partial(prefix_prefill_step, sample=sample),
+            mesh=mesh, in_specs=(P(), sspecs) + (P(),) * 7,
+            out_specs=(P(), sspecs, P()), check_vma=False)
+        return fn(params, dstate, batch, new_slots, prefix_slots, slot_ids,
+                  ctx, prefix_ctx, last_pos)
+
+    return prefix_step_sharded

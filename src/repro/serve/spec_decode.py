@@ -43,15 +43,22 @@ non-speculative decode with a warn-once (ROADMAP item).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
+from repro.core.partition import Partition
+from repro.dist.sharding import kv_state_specs
 from repro.models import layers as Lmod
 from repro.models.transformer import ModelDims
-from repro.kernels.paged_attention.ref import paged_attention_ref
-from .decode import (DecodeSpec, decode_cross, decode_ffn, project_logits,
-                     translate_step)
+from repro.kernels.paged_attention.ref import (paged_attention_ref,
+                                               paged_attention_blocks)
+from .decode import (DecodeSpec, _psum_gather_blocks, decode_cross,
+                     decode_ffn, project_logits, translate_step,
+                     translate_step_sharded)
 from .sampling import sample_tokens_q, verify_draft_tokens
 
 # families whose decode state is position-indexed only (KV pool / cross
@@ -95,7 +102,8 @@ def propose_ngram_drafts(hist: jax.Array, ctx: jax.Array, K: int,
 def make_spec_decode_step(cfg: ArchConfig, dims: ModelDims,
                           spec: DecodeSpec, num_draft_tokens: int,
                           mesh=None, pins=Lmod.no_pins,
-                          dtype=jnp.bfloat16, ngram: int = 2):
+                          dtype=jnp.bfloat16, ngram: int = 2,
+                          part: Partition = None):
     """Returns spec_step(params, dstate, tokens (B,), active, *, sample)
     -> (logits (B, K+1, V), new dstate, stats).
 
@@ -108,10 +116,13 @@ def make_spec_decode_step(cfg: ArchConfig, dims: ModelDims,
     (``translate_step``); the K+1 per-position write slots are gathered
     from its result, never re-looked-up.
     """
-    if mesh is not None:
+    sharded = mesh is not None and spec.kv_shards >= 1
+    if mesh is not None and not sharded:
         raise NotImplementedError(
             "speculative decode is single-host for now; the SPMD serve "
             "path (ROADMAP) drives the non-speculative step")
+    if sharded and part is None:
+        raise ValueError("spec.kv_shards >= 1 requires a Partition")
     if cfg.family not in SPEC_FAMILIES:
         raise ValueError(
             f"speculative decode does not support family {cfg.family!r} "
@@ -147,12 +158,30 @@ def make_spec_decode_step(cfg: ArchConfig, dims: ModelDims,
         # invalid (unmapped / inactive / out-of-range) scatter out of
         # bounds and drop — clamping would clobber a live block
         t_loc = positions % bs
-        ws = jnp.where(w_valid, w_slot, kp_l.shape[0])
-        kp_l = kp_l.at[ws, t_loc].set(k.astype(kp_l.dtype), mode="drop")
-        vp_l = vp_l.at[ws, t_loc].set(v.astype(vp_l.dtype), mode="drop")
-        # per-query extents pos+i+1: the sequential causal mask, inside
-        # one pool read (the verify-shaped Q>1 paged-attention path)
-        o, m_, l_ = paged_attention_ref(q, kp_l, vp_l, slots_b, ctx_q)
+        if sharded:
+            # ownership-masked write + exact bit-psum gather; the Q>1
+            # attention math itself is the same replicated path
+            m_idx = jax.lax.axis_index(spec.model_axis)
+            cps = part.slots_per_shard
+            wp = part.phys(w_slot)
+            mine_w = w_valid & ((wp // cps) == m_idx)
+            ws = jnp.where(mine_w, wp - m_idx * cps, kp_l.shape[0])
+            kp_l = kp_l.at[ws, t_loc].set(k.astype(kp_l.dtype),
+                                          mode="drop")
+            vp_l = vp_l.at[ws, t_loc].set(v.astype(vp_l.dtype),
+                                          mode="drop")
+            gk = _psum_gather_blocks(kp_l, slots_b, part, spec.model_axis)
+            gv = _psum_gather_blocks(vp_l, slots_b, part, spec.model_axis)
+            o, m_, l_ = paged_attention_blocks(q, gk, gv, slots_b, ctx_q)
+        else:
+            ws = jnp.where(w_valid, w_slot, kp_l.shape[0])
+            kp_l = kp_l.at[ws, t_loc].set(k.astype(kp_l.dtype),
+                                          mode="drop")
+            vp_l = vp_l.at[ws, t_loc].set(v.astype(vp_l.dtype),
+                                          mode="drop")
+            # per-query extents pos+i+1: the sequential causal mask,
+            # inside one pool read (verify-shaped Q>1 paged attention)
+            o, m_, l_ = paged_attention_ref(q, kp_l, vp_l, slots_b, ctx_q)
         out = (o / jnp.maximum(l_, 1e-30)[..., None]).astype(q.dtype)
         o_p = Lmod.linear(blk["attn"]["o"],
                           out.reshape(B, Qw, -1).astype(x.dtype))
@@ -186,8 +215,13 @@ def make_spec_decode_step(cfg: ArchConfig, dims: ModelDims,
         stats = {}
 
         # ---- the step's single translation dispatch ----------------------
-        trans = translate_step(dstate["tar"], dstate["sf"], dstate["flex"],
-                               pos0, spec)
+        if sharded:
+            trans = translate_step_sharded(
+                dstate["tar"], dstate["sf"], dstate["flex"], pos0, spec,
+                part)
+        else:
+            trans = translate_step(dstate["tar"], dstate["sf"],
+                                   dstate["flex"], pos0, spec)
         stats.update(slots=trans.slots, in_rest=trans.in_rest,
                      mapped=trans.mapped, accesses=trans.accesses)
         slots_b = trans.slots[0]                       # (B, nblk); G == 1
@@ -256,4 +290,18 @@ def make_spec_decode_step(cfg: ArchConfig, dims: ModelDims,
         stats["draft_tokens"] = drafts
         return logits, new_state, stats
 
-    return spec_step
+    if not sharded:
+        return spec_step
+
+    def spec_step_sharded(params, dstate, tokens, active=None, *,
+                          sample=False):
+        act = (jnp.ones_like(dstate["ctx_len"], jnp.bool_) if active is None
+               else active.astype(jnp.bool_))
+        sspecs = kv_state_specs(dstate, spec)
+        fn = jax.shard_map(
+            functools.partial(spec_step, sample=sample),
+            mesh=mesh, in_specs=(P(), sspecs, P(), P()),
+            out_specs=(P(), sspecs, P()), check_vma=False)
+        return fn(params, dstate, tokens, act)
+
+    return spec_step_sharded
