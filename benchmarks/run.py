@@ -53,6 +53,10 @@ KEY_METRICS = {
                  "preemptions_per_request"],
     "sharded": ["step_latency_ratio_vs_single_device",
                 "kv_bytes_per_shard"],
+    "prefix_cache": ["prefill_fwd_token_ratio_off_over_on",
+                     "ttft_mean_ratio_on_over_off",
+                     "peak_occupancy_ratio_on_over_off",
+                     "cold_miss_wall_ratio_on_over_off"],
 }
 
 

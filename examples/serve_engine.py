@@ -39,9 +39,12 @@ def main() -> None:
     system_prompt = rng.randint(0, cfg.vocab_size, 2 * bs)
     eng.add_request(Request(seq_id=0, prompt=system_prompt,
                             max_new_tokens=10))
-    # second request shares the system-prompt prefix (FlexSeg refcounts);
-    # both greedy, so seq 0 and seq 1 MUST print identical token streams
-    # — the quick correctness signal for this example
+    # second request has the same prompt: the engine's automatic prefix
+    # cache attaches seq 0's published blocks (FlexSeg refcounts), no
+    # kwargs needed.  The legacy share_prefix_from kwargs still parse —
+    # they warn once and the cache provides the equivalent dedup.  Both
+    # greedy, so seq 0 and seq 1 MUST print identical token streams —
+    # the quick correctness signal for this example
     eng.submit(Request(seq_id=1, prompt=system_prompt, max_new_tokens=10),
                share_prefix_from=0, shared_blocks=1)
     # long prompt: chunked over three steps under the 2-block budget
@@ -85,14 +88,49 @@ def main() -> None:
           f"swap_in={st.get('swap_in', 0)} "
           f"faults={st.get('swap_in_fault', 0)} "
           f"occupancy={mapped}/{eng.hybrid_cfg.total_slots}")
+    pcs = st["prefix_cache"]
+    print(f"prefix cache: lookups={pcs['lookups']} hits={pcs['hits']} "
+          f"dedup_blocks={pcs['dedup_blocks']} "
+          f"bytes_saved={pcs['bytes_saved'] / 2**10:.0f}KiB")
     for sid, row in sorted(st["per_request"].items()):
         print(f"  seq {sid}: rsw_hits={row['rsw_hits']} "
               f"flex_walks={row['flex_walks']} "
-              f"swap_faults={row['swap_faults']}")
+              f"swap_faults={row['swap_faults']} "
+              f"cached_blocks={row['cached_blocks']}")
     for sid in list(eng.requests):
         eng.release(sid)
     eng.manager.check_invariants()
     print("released; invariants OK")
+
+    # ---- prefix cache: shared-system-prompt fan-out (ISSUE 8) ---------
+    # N requests share one system prompt; only request 0's prefill
+    # installs those blocks — everyone admitted after it attaches them
+    # read-only from the content-addressed cache and forwards just its
+    # own unique tail.  Fan-out streams are bit-identical to what each
+    # request would produce alone (the differential suite pins this).
+    print("\n--- prefix cache: 6-way shared-system-prompt fan-out ---")
+    # budget = one prompt per step: request 0 publishes its blocks
+    # before anyone else admits (entries are matchable from the NEXT
+    # admission round), so requests 1-5 all hit
+    fan = Engine(cfg, params, EngineConfig(
+        max_batch=6, max_seq_len=8 * bs, pool_headroom=1.0,
+        prefill_budget=4 * bs, auto_release=True))
+    sys_prompt = rng.randint(0, cfg.vocab_size, 3 * bs)
+    for i in range(6):
+        fan.submit(Request(
+            seq_id=i,
+            prompt=np.concatenate(
+                [sys_prompt, rng.randint(0, cfg.vocab_size, bs)]),
+            max_new_tokens=6))
+    for out in fan.stream():
+        pass
+    pcs = fan.stats()["prefix_cache"]
+    fwd = sum(c.fwd_tokens for c in fan.admission_log)
+    print(f"6 requests x 4-block prompts (3 shared): "
+          f"hits={pcs['hits']}/{pcs['lookups']} "
+          f"dedup_blocks={pcs['dedup_blocks']} "
+          f"bytes_saved={pcs['bytes_saved'] / 2**10:.0f}KiB "
+          f"prefill_fwd_tokens={fwd} (vs {6 * 4 * bs} cache-off)")
 
     # ---- speculative decoding: same API, K tokens per dispatch --------
     # A fresh engine with spec_decode="ngram": each decode dispatch

@@ -10,6 +10,8 @@ from .translate import (TranslationState, TranslateResult, translate,
 from .policies import SRRIP, CostTracker, CostTrackerConfig
 from .kv_manager import (HybridKVManager, BlockInfo, PoolExhausted,
                          AllocLedger, REST, FLEX, SWAP)
+from .prefix_cache import (PrefixCache, CacheEntry, block_hash_chain,
+                           CHAIN_SEED)
 from .ech import ElasticCuckooTable, ECHState
 from .pom_tlb import POMTLB, POMTLBState
 
@@ -24,5 +26,6 @@ __all__ = [
     "SRRIP", "CostTracker", "CostTrackerConfig",
     "HybridKVManager", "BlockInfo", "PoolExhausted", "AllocLedger",
     "REST", "FLEX", "SWAP",
+    "PrefixCache", "CacheEntry", "block_hash_chain", "CHAIN_SEED",
     "ElasticCuckooTable", "ECHState", "POMTLB", "POMTLBState",
 ]

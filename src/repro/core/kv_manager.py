@@ -87,6 +87,12 @@ class AllocLedger:
     so one ledger can gate a whole admission round incrementally.  In
     ``restrictive_only`` mode allocation never "fails" (a set conflict
     swaps the block, Fig. 9 semantics), so every reserve succeeds.
+
+    A failed reserve is not necessarily final: the engine's capacity
+    gate first reclaims unreferenced prefix-cache entries
+    (``PrefixCache.evict_one`` frees a FlexSeg slot each) and retries
+    with a FRESH ledger — dropping clean cache is the cheapest rung of
+    the overload ladder, below preemption.
     """
 
     def __init__(self, mgr: "HybridKVManager"):
@@ -138,6 +144,11 @@ class HybridKVManager:
         self.blocks: Dict[int, BlockInfo] = {}       # vpn -> info
         self.slot_refcount: Dict[int, int] = defaultdict(int)  # flex sharing
         self.slot_owner = -np.ones(cfg.total_slots, np.int64)  # slot -> vpn
+        # slots owned (in addition to any live mappings) by the prefix
+        # cache (core/prefix_cache.py): each holds one extra refcount so
+        # cached content survives every sequence release.  Invariant:
+        # slot_refcount[s] == flex-table occupancy + (s in cached_slots)
+        self.cached_slots: set = set()
         self.seq_lengths: Dict[int, int] = {}        # seq_slot -> tokens
         self._free_seq_slots = list(range(cfg.max_seqs - 1, -1, -1))
         self._seq_ids: Dict[int, int] = {}           # user seq id -> seq slot
@@ -566,6 +577,76 @@ class HybridKVManager:
         self.stats["migrations_rest_to_flex"] += 1
         return info
 
+    # ------------------------------------- prefix-cache slot ownership
+    def cache_pin_block(self, seq_id: int, block_idx: int) -> Optional[int]:
+        """Give the prefix cache a reference on a live block's slot.
+
+        Same copy-on-share rules as :meth:`share_prefix`: the block must
+        live in the FlexSeg (a restrictive slot is tag-bound to one vpn),
+        so a REST-resident block migrates first — and the pin fails
+        (``None``) when the block is swapped, unmapped, already cached,
+        or no FlexSeg slot is free to migrate into.  On success the
+        slot's refcount grows by one CACHE reference (not tied to any
+        sequence), the block becomes read-only, and the slot is recorded
+        in ``cached_slots`` for the invariant cross-check.
+        """
+        s = self.seq_slot(seq_id)
+        vpn = self.cfg.vpn(s, block_idx)
+        info = self.blocks.get(vpn)
+        if info is None or info.seg == SWAP:
+            return None
+        if info.seg == REST:
+            info = self._migrate_rest_to_flex(vpn)
+            if info is None:
+                return None
+        if info.slot in self.cached_slots:
+            return None  # one cache entry per physical slot
+        self.slot_refcount[info.slot] += 1
+        self.cached_slots.add(info.slot)
+        info.writable = False  # cached content is immutable
+        self._sync_shared_refcounts(info.slot)
+        self.stats["cache_pinned_blocks"] += 1
+        return info.slot
+
+    def cache_unpin_slot(self, slot: int) -> None:
+        """Drop the cache's reference on a slot (entry evicted).  When
+        that was the last reference the slot returns to the free list;
+        otherwise live attachers keep it (their refcounts re-synced)."""
+        assert slot in self.cached_slots, f"slot {slot} not cache-owned"
+        self.cached_slots.discard(slot)
+        self.slot_refcount[slot] -= 1
+        if self.slot_refcount[slot] <= 0:
+            del self.slot_refcount[slot]
+            self.slot_owner[slot] = -1
+            self.flex_free.append(slot)
+        else:
+            self._sync_shared_refcounts(slot)
+
+    def attach_cached_block(self, seq_id: int, block_idx: int,
+                            slot: int) -> BlockInfo:
+        """Map a sequence block onto a cache-owned slot, read-only.
+
+        The cache-hit analogue of the dst half of :meth:`share_prefix`:
+        the new vpn joins the slot's sharers (refcount + flex-table
+        entry + dirty mark for the delta sync) without copying KV —
+        the whole point of content-addressed dedup.
+        """
+        assert slot in self.cached_slots, f"slot {slot} not cache-owned"
+        s = self.seq_slot(seq_id)
+        vpn = self.cfg.vpn(s, block_idx)
+        if vpn in self.blocks:
+            self._release(vpn)
+        self.slot_refcount[slot] += 1
+        self.flex_table[s, block_idx] = slot
+        self._dirty_flex.add(vpn)
+        info = BlockInfo(vpn=vpn, seg=FLEX, slot=slot,
+                         refcount=self.slot_refcount[slot], writable=False)
+        self.blocks[vpn] = info
+        self._sync_shared_refcounts(slot)
+        self.stats["shared_blocks"] += 1
+        self.stats["cache_attached_blocks"] += 1
+        return info
+
     # ----------------------------------------------------------- swap path
     def swap_in(self, seq_id: int, block_idx: int) -> BlockInfo:
         """Bring a swapped block back (counts a swap access, Fig. 9)."""
@@ -649,16 +730,33 @@ class HybridKVManager:
         mapped_flex = set(int(x) for x in self.flex_table.ravel() if x >= 0)
         free_flex = set(self.flex_free)
         assert not (mapped_flex & free_flex), "slot both mapped and free"
-        # slot_refcount must equal flex-table occupancy exactly: each
-        # refcount is the number of (seq, block) flex entries mapping the
-        # slot, and no freed/promoted slot may keep a stale count
+        # slot_refcount must equal flex-table occupancy plus the prefix
+        # cache's own reference exactly: each refcount is the number of
+        # (seq, block) flex entries mapping the slot, +1 iff the cache
+        # pinned it (the PR-8 cache-ownership cross-check — a rogue
+        # release of a cached slot, or a cache pin that leaked, breaks
+        # this equality immediately)
         occ: Dict[int, int] = defaultdict(int)
         for x in self.flex_table.ravel():
             if x >= 0:
                 occ[int(x)] += 1
+        want = dict(occ)
+        for slot in self.cached_slots:
+            want[slot] = want.get(slot, 0) + 1
         rc = {s: c for s, c in self.slot_refcount.items() if c != 0}
-        assert rc == dict(occ), \
-            f"slot_refcount {rc} != flex-table occupancy {dict(occ)}"
+        assert rc == want, \
+            (f"slot_refcount {rc} != flex occupancy + cache refs {want} "
+             f"(cached_slots={sorted(self.cached_slots)})")
+        for slot in self.cached_slots:
+            assert slot >= self.cfg.rest_slots, \
+                f"cached slot {slot} is in the RestSeg (must be FlexSeg)"
+            assert slot not in free_flex, \
+                f"cached slot {slot} is also on the free list"
+            for s, b in np.argwhere(self.flex_table == slot):
+                info = self.blocks.get(
+                    int(s) * self.cfg.max_blocks_per_seq + int(b))
+                assert info is None or not info.writable, \
+                    f"cached slot {slot} has a WRITABLE live mapping"
         # every mapped block must belong to a REGISTERED sequence: a
         # preempted/freed sequence leaving blocks behind is a pool leak
         for vpn in self.blocks:

@@ -8,6 +8,12 @@
 * Fault-based allocation preference (treat every new block as
   costly-to-translate; put it in the RestSeg at allocation time).
 
+SRRIP also ages the prefix-cache DIRECTORY (core/prefix_cache.py,
+DESIGN.md §prefix-cache): the content-addressed cache is a second
+set-associative consumer of this class — hit promotion on every prefix
+match, victim selection restricted to unreferenced entries — so cached
+prompt blocks join the same replacement machinery as RestSeg ways.
+
 Host-side (numpy): allocation decisions are made by the engine between
 device steps, exactly as the OS makes them between faults in the paper.
 """

@@ -4,7 +4,8 @@
         --requests 8 --max-new 16 [--mode hybrid|flexible_only|restrictive_only] \\
         [--prefill-budget 128] [--scheduler fifo|spf|priority] \\
         [--temperature 0.8 --top-k 40 --top-p 0.95 --seed 0] \\
-        [--spec-decode --num-draft-tokens 4] [--data 1 --model 2]
+        [--spec-decode --num-draft-tokens 4] [--data 1 --model 2] \\
+        [--shared-prefix-blocks 4] [--no-prefix-cache]
 
 Drives the request-centric engine API: requests are submitted up front
 with per-request SamplingParams, the configured Scheduler admits them
@@ -59,6 +60,14 @@ def main() -> None:
                          "spec-off; recurrent families fall back)")
     ap.add_argument("--num-draft-tokens", type=int, default=4,
                     help="draft window width K (with --spec-decode)")
+    ap.add_argument("--no-prefix-cache", action="store_true",
+                    help="disable the automatic content-addressed prefix "
+                         "cache (on by default: identical prompt prefixes "
+                         "dedupe to shared pool blocks)")
+    ap.add_argument("--shared-prefix-blocks", type=int, default=0,
+                    help="prepend this many IDENTICAL prompt blocks to "
+                         "every request (a shared system prompt) — the "
+                         "workload the prefix cache dedupes")
     ap.add_argument("--data", type=int, default=1,
                     help="mesh data-axis size (replicated engine state)")
     ap.add_argument("--model", type=int, default=1,
@@ -74,18 +83,25 @@ def main() -> None:
     dims = model_dims(cfg, tp=1)
     params = init_params(jax.random.PRNGKey(0), cfg, dims)
     bs = cfg.kv_block_size
-    S = args.prompt_blocks * bs
+    S = (args.prompt_blocks + args.shared_prefix_blocks) * bs
     # no speculative headroom: a verify window overrunning the last KV
     # block is re-verified, not committed, so spec-on and spec-off run
     # the same pool sizing (stats stay apples-to-apples)
     eng = Engine(cfg, params, EngineConfig(
         max_batch=args.max_batch,
         max_seq_len=S + cfg.frontend_tokens + args.max_new + bs,
-        mode=args.mode, prefill_budget=args.prefill_budget,
+        # a shared-prefix demo needs a bounded admission budget: with
+        # room for every prompt in round 1, followers admit before
+        # request 0's blocks are published (insertion is post-dispatch)
+        # and the cache never gets a chance to hit
+        mode=args.mode, prefill_budget=(
+            S if args.prefill_budget is None
+            and args.shared_prefix_blocks > 0 else args.prefill_budget),
         auto_release=True, scheduler=args.scheduler,
         prefill_mode=args.prefill_mode,
         spec_decode="ngram" if args.spec_decode else None,
         num_draft_tokens=args.num_draft_tokens,
+        prefix_cache=False if args.no_prefix_cache else "auto",
         mesh_shape=((args.data, args.model)
                     if (args.data, args.model) != (1, 1) else None)))
     def sampling(sid):
@@ -97,12 +113,17 @@ def main() -> None:
             seed=None if args.seed is None else args.seed + sid)
 
     rng = np.random.RandomState(0)
+    shared = rng.randint(0, cfg.vocab_size,
+                         args.shared_prefix_blocks * bs)
     t0 = time.time()
     for sid in range(args.requests):
         frontend = (rng.randn(cfg.frontend_tokens, cfg.d_model)
                     .astype(np.float32) if cfg.frontend != "none" else None)
+        prompt = np.concatenate([
+            shared, rng.randint(0, cfg.vocab_size,
+                                args.prompt_blocks * bs)])
         eng.submit(Request(
-            seq_id=sid, prompt=rng.randint(0, cfg.vocab_size, S),
+            seq_id=sid, prompt=prompt,
             frontend=frontend, max_new_tokens=args.max_new,
             sampling=sampling(sid), priority=sid % 3))
     tokens = 0
@@ -125,6 +146,13 @@ def main() -> None:
           f"{st.get('rsw_hits', 0) / max(total, 1):.2%} "
           f"migrations={st.get('migrations_rest_to_flex', 0) + st.get('migrations_flex_to_rest', 0)} "
           f"swaps={st.get('swap_out', 0)}")
+    pcs = st["prefix_cache"]
+    print(f"prefix cache: enabled={pcs['enabled']} "
+          f"lookups={pcs['lookups']} hits={pcs['hits']} "
+          f"dedup_blocks={pcs['dedup_blocks']} "
+          f"bytes_saved={pcs['bytes_saved'] / 2**10:.0f}KiB "
+          f"evictions={pcs['evictions']} "
+          f"resident_entries={pcs['cached_blocks']}")
     if eng.spec_K:
         print(f"speculation: drafted={st['spec_drafted']} "
               f"accepted={st['spec_accepted']} "
@@ -138,7 +166,8 @@ def main() -> None:
                         f" ({row['accepted'] / max(row['drafted'], 1):.0%})")
         print(f"  seq {sid}: rsw_hits={row['rsw_hits']}/{seen} "
               f"flex_walks={row['flex_walks']} "
-              f"swap_faults={row['swap_faults']}{spec_row}")
+              f"swap_faults={row['swap_faults']} "
+              f"cached_blocks={row['cached_blocks']}{spec_row}")
 
 
 if __name__ == "__main__":

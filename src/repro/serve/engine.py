@@ -47,8 +47,15 @@ fronted by a request-centric API:
 * termination: ``max_new_tokens`` ("length") or ``eos_token`` ("stop");
   with ``auto_release=True`` the slot and KV blocks free immediately and
   recycle under sustained load;
-* prefix sharing between requests with a common prompt prefix (FlexSeg
-  refcounts — the paper's inter-process page sharing);
+* prefix sharing: an AUTOMATIC content-addressed prefix cache
+  (core/prefix_cache.py, ``EngineConfig.prefix_cache``, on by default)
+  hash-chains every installed prompt block into a set-associative
+  directory — the paper's restrictive mapping reused as a
+  content->physical map — so any later request sharing a prompt prefix
+  attaches the same physical blocks read-only (FlexSeg refcounts — the
+  paper's inter-process page sharing) and prefills only its tail;
+  unreferenced cache entries are the cheapest reclaim rung under
+  capacity pressure, and streams stay bit-identical to cache-off;
 * eviction/swap: pool exhaustion surfaces as swap events exactly as in
   the restrictive-only experiment (Fig. 9);
 * overload (ISSUE 6, DESIGN.md §tiered-KV-and-overload): when a KV
@@ -96,7 +103,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import (HybridConfig, HybridKVManager, Partition,
-                        PoolExhausted, SWAP)
+                        PoolExhausted, PrefixCache, SWAP, CHAIN_SEED,
+                        block_hash_chain)
 from repro.dist.sharding import kv_state_specs
 from repro.models import FwdOptions, model_dims
 from .decode import DecodeSpec, make_serve_step, init_decode_state
@@ -202,6 +210,15 @@ class EngineConfig:
     # state changes).  None = the single-device engine, trace-identical
     # to every pre-SPMD release.
     mesh_shape: Optional[Tuple[int, int]] = None
+    # Utopia-native global prefix cache (core/prefix_cache.py): "auto"
+    # (default) builds a PrefixCache whenever the configuration supports
+    # it (attention KV blocks + a flexible segment; silently off
+    # otherwise), True demands it (raises where unsupported), None/False
+    # disables it, and a ready PrefixCache instance is used as-is.
+    # Enabled, every submitted prompt automatically attaches its longest
+    # cached prefix read-only and only the tail runs prefill; token
+    # streams stay bit-identical to a cache-off run.
+    prefix_cache: Any = "auto"
 
 
 class ChunkRecord(NamedTuple):
@@ -279,6 +296,9 @@ class RequestState:
     # spec_drafted / spec_accepted counters)
     drafted: int = 0
     accepted: int = 0
+    # prefix-cache hits: blocks attached from the cache at admission
+    # (rows sum exactly to the global dedup_blocks counter)
+    cached_blocks: int = 0
     # overload bookkeeping: step of the latest commit (the LRU key for
     # victim selection) and how often this request was preempted (the
     # aggregate is surfaced via stats()["overload"])
@@ -324,6 +344,22 @@ class RequestOutput:
 
 _LEGACY_KWARGS_WARNED = False
 _SPEC_FALLBACK_WARNED = False
+_SHARE_KWARG_WARNED = False
+
+
+def _warn_share_kwarg() -> None:
+    global _SHARE_KWARG_WARNED
+    if _SHARE_KWARG_WARNED:
+        return
+    _SHARE_KWARG_WARNED = True
+    warnings.warn(
+        "submit(share_prefix_from=..., shared_blocks=...) is deprecated: "
+        "the engine's content-addressed prefix cache "
+        "(EngineConfig.prefix_cache, on by default) dedupes shared "
+        "prompt prefixes automatically — the kwargs are accepted but "
+        "the cache decides what is shared; with the cache disabled the "
+        "prompt is simply recomputed (sharing was always best-effort)",
+        DeprecationWarning, stacklevel=3)
 
 
 def _warn_spec_fallback(family: str) -> None:
@@ -543,7 +579,6 @@ class Engine:
         self._current: Optional[Request] = None     # mid-chunk prefill
         self._slot_of: Dict[int, int] = {}
         self._prefilling: Dict[int, int] = {}   # seq_id -> tokens installed
-        self._share: Dict[int, Tuple[int, int]] = {}
         self._pending_samp: List[Tuple[int, Request]] = []
         self._step_count = 0                    # scheduler clock (aging)
         # chunk trace: one ChunkRecord (seq_id, start, end, path,
@@ -557,6 +592,35 @@ class Engine:
         # device array per request (that is one D2H sync per sequence)
         self._ctx_host = np.zeros(max_batch, np.int64)
         self._synced_full = False
+        # ---- Utopia-native prefix cache (core/prefix_cache.py) ----------
+        pc = config.prefix_cache
+        reason = self._prefix_cache_unsupported()
+        if pc is True and reason is not None:
+            raise ValueError(f"prefix_cache=True is unsupported here: "
+                             f"{reason}")
+        self.prefix_cache: Optional[PrefixCache] = None
+        if pc not in (None, False) and reason is None:
+            self.prefix_cache = (pc if isinstance(pc, PrefixCache)
+                                 else PrefixCache(self.manager))
+        # per-request memo of the prompt's block chain hashes (computed
+        # once, used by both the admission-time match and the
+        # post-dispatch inserts)
+        self._chain_cache: Dict[int, np.ndarray] = {}
+
+    def _prefix_cache_unsupported(self) -> Optional[str]:
+        """Why the prefix cache cannot run on this configuration (None =
+        supported).  ``prefix_cache="auto"`` silently disables on these;
+        ``prefix_cache=True`` raises with the reason."""
+        if not self._n_attn_layers:
+            return ("the model family has no attention KV blocks to "
+                    "cache")
+        if self.hybrid_cfg.mode == "restrictive_only":
+            return ("content sharing needs a flexible segment (a "
+                    "restrictive slot is tag-bound to a single vpn)")
+        if self._front_tokens():
+            return ("vlm frontend KV blocks precede the prompt blocks, "
+                    "so prompt-block indices are not content-pure")
+        return None
 
     # ------------------------------------------------------------ admission
     @property
@@ -605,8 +669,14 @@ class Engine:
                 f"sequence slot; call release({req.seq_id}) first or "
                 "construct the engine with auto_release=True")
         self.finished.pop(req.seq_id, None)   # forget a finished reuse
+        self._chain_cache.pop(req.seq_id, None)   # fresh chains on reuse
         if share_prefix_from is not None and shared_blocks:
-            self._share[req.seq_id] = (share_prefix_from, shared_blocks)
+            # legacy pairwise sharing: superseded by the automatic
+            # content-addressed prefix cache — the source's prompt blocks
+            # were published at its own admission, so the cache match at
+            # THIS request's admission attaches the same physical slots
+            # the explicit kwargs used to
+            _warn_share_kwarg()
         state = RequestState(request=req, arrival=self._step_count)
         object.__setattr__(req, "_engine_state", state)
         self._states[req.seq_id] = state
@@ -650,6 +720,9 @@ class Engine:
         if budget is None:
             budget = sum(len(np.asarray(r.prompt)) for r in self.waiting)
         chunks: List[Tuple[Request, int, int, bool, bool]] = []
+        # cache-hit regions attached at registration: extra hist spans
+        # (the tail chunks never cover the attached prefix's tokens)
+        hist_extra: List[Tuple[Request, int, int, bool, bool]] = []
         # exact capacity gating (ISSUE 6): every accepted chunk's
         # unmapped covering blocks are reserved against a dry-run ledger
         # BEFORE the chunk is committed, so the bucket allocations below
@@ -686,16 +759,8 @@ class Engine:
                 self.requests[req.seq_id] = req
                 self._prefilling[req.seq_id] = 0
                 self._pending_samp.append((slot, req))
-                share = self._share.pop(req.seq_id, None)
-                # the source may have finished and auto-released while the
-                # sharer waited in the queue: sharing is an optimization,
-                # so fall back to plain (recomputed) prefill, not a crash
-                if share is not None and share[0] in m._seq_ids:
-                    m.share_prefix(share[0], req.seq_id, share[1])
-                    # drain migration copies NOW: the freed RestSeg slots
-                    # may be reallocated by the prefill below, and a stale
-                    # deferred copy would then clobber the shared slot
-                    self._apply_copies()
+                if self.prefix_cache is not None:
+                    self._attach_cached_prefix(req, hist_extra)
             start = self._prefilling[req.seq_id]
             total = len(np.asarray(req.prompt))
             take = min(total - start, budget // bs * bs)
@@ -753,8 +818,9 @@ class Engine:
         # before any prefill dispatch samples its first token
         self._install_sampling()
         # ... and, under speculative decoding, so must their prompt
-        # tokens: the in-graph drafter matches against the history
-        self._install_hist(chunks)
+        # tokens: the in-graph drafter matches against the history —
+        # including cache-attached prefixes, which no chunk ever covers
+        self._install_hist(chunks + hist_extra)
 
         # ---- bucket by padded length; one dispatch per bucket -----------
         # Recompute chunks bucket by padded PREFIX length (the forward
@@ -787,6 +853,15 @@ class Engine:
             pending.extend(self._prefill_bucket(grp, s_pad, front))
         for (s_pad, nblk_buf), grp in sorted(pbuckets.items()):
             pending.extend(self._prefix_bucket(grp, s_pad, nblk_buf, front))
+        # ---- publish installed chunks to the prefix cache ---------------
+        # POST-dispatch: entries become matchable from the NEXT admission
+        # round onward, so a same-round duplicate can never attach a
+        # block whose install dispatch has not run, and the pin
+        # migrations' pending copies land with the step's normal
+        # _apply_copies before anything reads the cached slots
+        if self.prefix_cache is not None:
+            for req, start, end, final, use_prefix in chunks:
+                self._cache_insert_chunk(req, start, end)
         return pending
 
     # -------------------------------------------- overload / host KV tier
@@ -803,11 +878,72 @@ class Engine:
                 for cb in range(cb0, (front + end) // bs)
                 if m.lookup(req.seq_id, cb)[0] < 0]
 
+    # --------------------------------------------- prefix cache plumbing
+    def _chains(self, req: Request) -> np.ndarray:
+        """Memoized per-block chain hashes of a request's prompt."""
+        c = self._chain_cache.get(req.seq_id)
+        if c is None:
+            c = block_hash_chain(np.asarray(req.prompt),
+                                 self.cfg.kv_block_size)
+            self._chain_cache[req.seq_id] = c
+        return c
+
+    def _attach_cached_prefix(self, req: Request, hist_extra) -> None:
+        """Longest-cached-prefix match at registration: matched blocks
+        attach read-only (the cache slot's refcount grows per attacher)
+        and prefill starts at the tail.  The match is capped one block
+        short of the full prompt so the FINAL chunk always runs — it
+        produces the request's first-token logits."""
+        pc = self.prefix_cache
+        m = self.manager
+        bs = self.cfg.kv_block_size
+        pc.stats["lookups"] += 1
+        prompt = np.asarray(req.prompt)
+        entries = pc.match(prompt, self._chains(req))
+        entries = entries[:len(prompt) // bs - 1]
+        if not entries:
+            return
+        for cb, e in enumerate(entries):
+            m.attach_cached_block(req.seq_id, cb, e.slot)
+        matched = len(entries) * bs
+        self._prefilling[req.seq_id] = matched
+        st = self._states[req.seq_id]
+        st.cached_blocks += len(entries)
+        pc.stats["hits"] += 1
+        pc.stats["dedup_blocks"] += len(entries)
+        if self.spec_K:
+            # the tail chunks never cover [0, matched): scatter the
+            # attached prefix's tokens into the drafter history here
+            hist_extra.append((req, 0, matched, False, False))
+
+    def _cache_insert_chunk(self, req: Request, start: int,
+                            end: int) -> None:
+        """Publish a freshly installed chunk's blocks to the cache (one
+        insert per covered block, parent-chained; dedup / full-set
+        bypass handled inside :meth:`PrefixCache.insert`)."""
+        bs = self.cfg.kv_block_size
+        chains = self._chains(req)
+        prompt = np.asarray(req.prompt)
+        for cb in range(start // bs, end // bs):
+            parent = CHAIN_SEED if cb == 0 else int(chains[cb - 1])
+            self.prefix_cache.insert(
+                int(chains[cb]), parent, prompt[cb * bs:(cb + 1) * bs],
+                req.seq_id, cb)
+
     def _capacity_ok(self, reserved, need) -> bool:
         """Exact dry-run: could the pool allocate ``reserved`` (this
-        round's already-accepted vpns) PLUS ``need`` right now?"""
-        return self.manager.alloc_ledger().reserve(
-            list(reserved) + list(need))
+        round's already-accepted vpns) PLUS ``need`` right now?  A miss
+        first reclaims UNREFERENCED prefix-cache entries — the cheapest
+        rung of the degradation ladder: dropping clean cache frees one
+        FlexSeg slot per entry and re-runs the dry-run against a fresh
+        ledger — before the caller escalates to preemption."""
+        want = list(reserved) + list(need)
+        while True:
+            if self.manager.alloc_ledger().reserve(want):
+                return True
+            if (self.prefix_cache is None
+                    or not self.prefix_cache.evict_one()):
+                return False
 
     def _others_hold_blocks(self, seq_id: int) -> bool:
         m = self.manager
@@ -1120,7 +1256,7 @@ class Engine:
                           and self._injector.alloc_unavailable(
                               self._step_count, "decode"))
                 first = False
-                if not forced and m.alloc_ledger().reserve([vpn]):
+                if not forced and self._capacity_ok((), (vpn,)):
                     if in_swap:
                         m.swap_in(sid, b)
                         st.swap_faults += 1
@@ -1800,6 +1936,7 @@ class Engine:
     # ------------------------------------------------------------ teardown
     def release(self, seq_id: int) -> None:
         self.manager.free_sequence(seq_id)
+        self._chain_cache.pop(seq_id, None)
         slot = self._slot_of.pop(seq_id)
         self.dstate["ctx_len"] = self.dstate["ctx_len"].at[slot].set(0)
         self._ctx_host[slot] = 0
@@ -1813,6 +1950,16 @@ class Engine:
             self._current = None
         self._prefilling.pop(seq_id, None)
         self._sync_translation()
+
+    def _kv_block_bytes(self) -> int:
+        """Device bytes one pool block occupies across both KV pools
+        (all attention layers): the unit behind ``bytes_saved``."""
+        k = self.dstate.get("k_pool")
+        if k is None:
+            return 0
+        n_slots = int(k.shape[1])
+        return int((k.nbytes + self.dstate["v_pool"].nbytes)
+                   // max(n_slots, 1))
 
     def stats(self) -> dict:
         """Global manager counters plus ``"per_request"``: RestSeg hits /
@@ -1838,10 +1985,27 @@ class Engine:
             "request_preempts": sum(st.preempts
                                     for st in self._states.values()),
         }
+        # prefix-cache telemetry: the per-request cached_blocks rows sum
+        # exactly to the global dedup_blocks counter (same attribution
+        # invariant as rsw_hits/flex_walks — cross-checked in tests)
+        pc = self.prefix_cache
+        s["prefix_cache"] = {
+            "enabled": pc is not None,
+            "lookups": int(pc.stats["lookups"]) if pc else 0,
+            "hits": int(pc.stats["hits"]) if pc else 0,
+            "dedup_blocks": int(pc.stats["dedup_blocks"]) if pc else 0,
+            "bytes_saved": (int(pc.stats["dedup_blocks"])
+                            * self._kv_block_bytes() if pc else 0),
+            "inserts": int(pc.stats["inserts"]) if pc else 0,
+            "insert_bypass": int(pc.stats["insert_bypass"]) if pc else 0,
+            "evictions": int(pc.stats["evictions"]) if pc else 0,
+            "cached_blocks": pc.n_entries if pc else 0,
+        }
         s["per_request"] = {
             sid: {"rsw_hits": st.rsw_hits, "flex_walks": st.flex_walks,
                   "swap_faults": st.swap_faults, "drafted": st.drafted,
-                  "accepted": st.accepted}
+                  "accepted": st.accepted,
+                  "cached_blocks": st.cached_blocks}
             for sid, st in self._states.items()}
         if self.partition is not None:
             # per-shard view: each key sums EXACTLY to its global above
@@ -1865,6 +2029,8 @@ class Engine:
         per-shard swap-byte attribution must sum exactly to the global
         swap counters."""
         self.manager.check_invariants()
+        if self.prefix_cache is not None:
+            self.prefix_cache.check_invariants()
         m = self.manager
         tar = np.asarray(jax.device_get(self.dstate["tar"]))[0]
         sf = np.asarray(jax.device_get(self.dstate["sf"]))[0]

@@ -21,6 +21,14 @@ not-yet-prefilled prompt tail continues as ordinary chunks — chunk k>0
 prefix-KV against the restored blocks, no recompute.  There is no
 separate resume forward; graceful degradation reuses this machinery.
 
+Prefix-cache hits (PR 8, DESIGN.md §prefix-cache) enter the same way:
+a request whose leading blocks matched the content-addressed cache
+starts prefill AT THE TAIL — its first chunk is already a k>0 chunk
+whose ``prefix_slots`` point at the cache-attached read-only blocks.
+No prefill step knows about the cache; it only ever sees installed
+prefix blocks, which is why cache-on streams are bit-identical to
+cache-off (the PR-4 installed==recomputed pin carries the contract).
+
 One dispatch admits a whole *bucket* of sequences: the prompts' K/V are
 computed by the forward, then scattered into the pool slots the manager
 translated (``slots`` input, produced host-side by fault-based

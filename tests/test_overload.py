@@ -517,4 +517,4 @@ def test_overload_stats_block_and_per_request_shape():
     assert ov["preempted_seqs"] > 0
     for row in s["per_request"].values():
         assert set(row) == {"rsw_hits", "flex_walks", "swap_faults",
-                            "drafted", "accepted"}
+                            "drafted", "accepted", "cached_blocks"}

@@ -1,0 +1,524 @@
+"""Utopia-native global prefix cache (ISSUE 8).
+
+Tentpole contract: the content-addressed prefix cache
+(``core/prefix_cache.py``) is INVISIBLE in the token streams.  For any
+workload, every request's stream with the cache on is bit-identical to
+the cache-off run — across greedy+sampled x spec on/off x chunked
+admission x preempt/resume x recompute prefill x sharded meshes.  The
+cache only changes how much prefill compute runs and how many physical
+slots the shared blocks occupy.
+
+Also pinned here:
+
+* hash-chain semantics (``block_hash_chain``): prefix property, block
+  order sensitivity, trailing-partial-block truncation;
+* directory mechanics at the manager level: insert/dedup/match,
+  refcount-guarded eviction, ``evict_one`` as the degradation ladder's
+  cheapest rung (engine capacity-reclaim test);
+* the cache-ownership invariant (satellite 6): ``slot_refcount[s] ==
+  flex occupancy + (s in cached_slots)`` — a rogue release of the
+  cache's reference trips ``check_invariants``;
+* telemetry cross-checks: per-request ``cached_blocks`` rows sum to the
+  global ``dedup_blocks``; ``bytes_saved`` scales with the KV block;
+* the legacy ``submit(share_prefix_from=...)`` kwargs parse, warn
+  exactly once, and the cache delivers the equivalent dedup.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core import (CHAIN_SEED, HybridConfig, HybridKVManager,
+                        PrefixCache, block_hash_chain)
+from repro.models import model_dims, init_params
+from repro.runtime import ServeFaultInjector
+from repro.serve import Engine, EngineConfig, Request
+from repro.serve.sampling import SamplingParams
+
+try:
+    from hypothesis import given, settings, strategies as st, HealthCheck
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+
+_SETUP_CACHE = {}
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def _setup(arch="granite-8b"):
+    """2-layer reduced model (the test_overload recipe): many engine
+    pairs run here, and recurring bucket shapes hit the jit cache."""
+    if arch not in _SETUP_CACHE:
+        cfg = dataclasses.replace(reduced(ARCHS[arch]), num_layers=2)
+        dims = model_dims(cfg, tp=1)
+        params = init_params(jax.random.PRNGKey(2), cfg, dims)
+        _SETUP_CACHE[arch] = (cfg, params)
+    return _SETUP_CACHE[arch]
+
+
+def _drain(eng, max_steps=900):
+    """Poll to completion, asserting pool AND cache-directory
+    consistency after every step."""
+    outs = {}
+    for _ in range(max_steps):
+        for ro in eng.poll():
+            outs.setdefault(ro.seq_id, []).extend(ro.new_token_ids)
+        eng.manager.check_invariants()
+        if eng.prefix_cache is not None:
+            eng.prefix_cache.check_invariants()
+        if not eng.has_unfinished():
+            return outs
+    raise AssertionError("engine failed to drain")
+
+
+def _fanout(cfg, params, cache, *, n_req=6, shared_blocks=3,
+            tail_blocks=1, max_new=8, sampling=None, spec=None,
+            budget_blocks="prompt", headroom=2.0, inj=None,
+            prefill_mode="prefix_kv", seed=13):
+    """Shared-system-prompt fan-out: ``n_req`` requests share a
+    ``shared_blocks`` prefix and differ in a random tail.  With
+    ``budget_blocks="prompt"`` one full prompt admits per round, so
+    request 0 publishes the shared blocks before anyone else admits
+    (cache entries are matchable from the NEXT round)."""
+    bs = cfg.kv_block_size
+    nblk = shared_blocks + tail_blocks
+    budget = nblk if budget_blocks == "prompt" else budget_blocks
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_seq_len=(nblk + 3) * bs,
+        pool_headroom=headroom, auto_release=True,
+        prefill_budget=None if budget is None else budget * bs,
+        prefill_mode=prefill_mode, spec_decode=spec,
+        fault_injector=inj,
+        prefix_cache="auto" if cache else False))
+    rng = np.random.RandomState(seed)
+    shared = rng.randint(0, cfg.vocab_size, shared_blocks * bs)
+    for i in range(n_req):
+        eng.submit(Request(
+            seq_id=i,
+            prompt=np.concatenate(
+                [shared, rng.randint(0, cfg.vocab_size,
+                                     tail_blocks * bs)]),
+            max_new_tokens=max_new,
+            sampling=sampling if sampling is not None
+            else SamplingParams()))
+    outs = _drain(eng)
+    assert set(outs) == set(range(n_req))
+    return outs, eng
+
+
+# ------------------------------------------------- the differential oracle
+
+SAMPLED = SamplingParams(temperature=0.8, top_k=40, seed=123)
+
+
+@pytest.mark.parametrize("spec,sampling", [
+    (None, None), (None, SAMPLED), ("ngram", None), ("ngram", SAMPLED),
+], ids=["greedy", "sampled", "spec-greedy", "spec-sampled"])
+def test_cache_streams_bit_identical(spec, sampling):
+    """6 requests, 3 shared + 1 unique block each: the cache dedupes the
+    shared prefix (hits for everyone admitted after request 0) and every
+    stream still equals the cache-off run token for token.  Under
+    speculation the attached prefix also seeds the drafter's ``hist``."""
+    cfg, params = _setup()
+    off, _ = _fanout(cfg, params, False, spec=spec, sampling=sampling)
+    on, eng = _fanout(cfg, params, True, spec=spec, sampling=sampling)
+    for sid in off:
+        assert on[sid] == off[sid], f"seq {sid} diverged with cache on"
+    pcs = eng.stats()["prefix_cache"]
+    assert pcs["hits"] == 5                 # everyone after request 0
+    assert pcs["dedup_blocks"] == 5 * 3
+    # drained requests released; the cache's references keep the shared
+    # slots resident (that is the point) — no sequence leaks though
+    assert not eng.manager.blocks
+    assert not eng.manager.seq_lengths
+    assert eng.manager.cached_slots
+
+
+def test_cache_chunked_admission_identical():
+    """prefill_budget = 1 block: prompts chunk across steps, the matched
+    prefix skips straight to the tail chunks, and the streams still
+    match the cache-off chunked run."""
+    cfg, params = _setup()
+    off, _ = _fanout(cfg, params, False, budget_blocks=1, tail_blocks=2)
+    on, eng = _fanout(cfg, params, True, budget_blocks=1, tail_blocks=2)
+    assert on == off
+    assert eng.stats()["prefix_cache"]["hits"] > 0
+
+
+def test_cache_recompute_prefill_identical():
+    """prefill_mode="recompute" (the full-prefix oracle path) composes
+    with cache hits: already-mapped blocks are skipped at allocation and
+    writes to their -1 slots are dropped."""
+    cfg, params = _setup()
+    off, _ = _fanout(cfg, params, False, budget_blocks=2,
+                     prefill_mode="recompute")
+    on, eng = _fanout(cfg, params, True, budget_blocks=2,
+                      prefill_mode="recompute")
+    assert on == off
+    assert eng.stats()["prefix_cache"]["hits"] > 0
+
+
+def test_cache_preempt_resume_identical():
+    """Forced preemptions (the ISSUE-6 injector) tear sequences holding
+    cache-attached read-only blocks out mid-flight; resume gives them
+    private copies and the streams stay equal to the clean cache-off
+    run.  Chain of equality: off_clean == on_clean == on_chaos."""
+    cfg, params = _setup()
+    off, _ = _fanout(cfg, params, False, n_req=8, max_new=12)
+    on, _ = _fanout(cfg, params, True, n_req=8, max_new=12)
+    assert on == off
+    inj = ServeFaultInjector(preempt_at=[(3, "pre", "auto"),
+                                         (6, "post", "auto"),
+                                         (9, "pre", "auto")])
+    chaos, eng = _fanout(cfg, params, True, n_req=8, max_new=12, inj=inj)
+    assert chaos == off
+    assert eng.stats()["overload"]["request_preempts"] >= 1
+    assert eng.stats()["prefix_cache"]["hits"] > 0
+
+
+def test_cache_tight_pool_reclaims_before_preempt():
+    """The capacity gate's cheapest rung: a pool too small to hold the
+    cache residue plus new admissions reclaims unreferenced cache
+    entries (evict_one) before ever preempting — sequential distinct
+    prompts keep publishing blocks nobody references again."""
+    cfg, params = _setup()
+    bs = cfg.kv_block_size
+
+    def run(cache):
+        # all-flex pool: every published block is cache-pinnable, so the
+        # residue grows until ONLY eviction can admit the next request
+        eng = Engine(cfg, params, EngineConfig(
+            max_batch=2, max_seq_len=6 * bs, pool_headroom=1.0,
+            restseg_fraction=0.0, auto_release=True,
+            prefix_cache="auto" if cache else False))
+        rng = np.random.RandomState(3)
+        outs = {}
+        for i in range(8):                 # sequential: drain each fully
+            eng.submit(Request(
+                seq_id=i, prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                max_new_tokens=6))
+            outs.update(_drain(eng))
+        return outs, eng
+
+    off, _ = run(False)
+    on, eng = run(True)
+    assert on == off
+    pcs = eng.stats()["prefix_cache"]
+    assert pcs["evictions"] > 0, "pool pressure never exercised eviction"
+    assert eng.stats()["overload"]["preempted_seqs"] == 0
+
+
+if HAVE_HYPOTHESIS:
+    @settings(deadline=None, max_examples=5,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(data=st.data())
+    def test_cache_differential_fuzz(data):
+        """Random (fan-out shape x budget x spec x sampling x pressure):
+        the cache-on run equals cache-off for ANY draw, with pool and
+        directory invariants green after every step (``_drain``)."""
+        cfg, params = _setup()
+        kw = dict(
+            n_req=data.draw(st.integers(2, 5), label="n_req"),
+            shared_blocks=data.draw(st.integers(0, 3), label="shared"),
+            tail_blocks=data.draw(st.integers(1, 2), label="tail"),
+            budget_blocks=data.draw(st.sampled_from([1, "prompt", None]),
+                                    label="budget"),
+            spec=data.draw(st.sampled_from([None, "ngram"]), label="spec"),
+            sampling=data.draw(st.sampled_from([None, SAMPLED]),
+                               label="sampling"),
+            headroom=data.draw(st.sampled_from([0.75, 2.0]),
+                               label="headroom"),
+            max_new=6,
+            seed=data.draw(st.integers(0, 3), label="seed"))
+        off, _ = _fanout(cfg, params, False, **kw)
+        on, _ = _fanout(cfg, params, True, **kw)
+        assert on == off
+else:
+    def test_cache_differential_fuzz():
+        pytest.skip("hypothesis not installed")
+
+
+# ---------------------------------------------------- sharded differential
+
+def test_cache_sharded_mesh_identical():
+    """mesh_shape=(1, 2): the cache mutates only host-side flex tables
+    and refcounts, the dirty-row sync carries the attachments to the
+    sharded mirrors, and the streams equal the single-device cache-off
+    run.  Subprocess pins 8 host devices before importing jax (the
+    test_sharded_serve recipe)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import numpy as np, jax
+        from repro.configs import ARCHS, reduced
+        from repro.models import model_dims, init_params
+        from repro.serve import Engine, EngineConfig, Request
+        cfg = dataclasses.replace(reduced(ARCHS["granite-8b"]),
+                                  num_layers=2)
+        dims = model_dims(cfg, tp=1)
+        params = init_params(jax.random.PRNGKey(2), cfg, dims)
+        bs = cfg.kv_block_size
+
+        def run(mesh, cache):
+            eng = Engine(cfg, params, EngineConfig(
+                max_batch=4, max_seq_len=7 * bs, auto_release=True,
+                prefill_budget=4 * bs, mesh_shape=mesh,
+                prefix_cache="auto" if cache else False))
+            rng = np.random.RandomState(13)
+            shared = rng.randint(0, cfg.vocab_size, 3 * bs)
+            for i in range(5):
+                eng.submit(Request(seq_id=i, prompt=np.concatenate(
+                    [shared, rng.randint(0, cfg.vocab_size, bs)]),
+                    max_new_tokens=6))
+            outs = {}
+            for _ in range(600):
+                for ro in eng.poll():
+                    outs.setdefault(ro.seq_id, []).extend(
+                        ro.new_token_ids)
+                if not eng.has_unfinished():
+                    break
+            eng.check_invariants()
+            return outs, eng
+
+        base, _ = run(None, False)
+        got, eng = run((1, 2), True)
+        assert got == base, "sharded cache-on stream diverged"
+        assert eng.stats()["prefix_cache"]["hits"] > 0
+        print("ALL_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0 and "ALL_OK" in out.stdout, (
+        out.stdout[-2000:], out.stderr[-4000:])
+
+
+# ------------------------------------------------------ hash-chain algebra
+
+def test_block_hash_chain_properties():
+    bs = 8
+    t = np.arange(32, dtype=np.int64)
+    ch = block_hash_chain(t, bs)
+    assert len(ch) == 4
+    # deterministic
+    assert list(block_hash_chain(t, bs)) == list(ch)
+    # trailing partial block is ignored (it cannot be content-complete)
+    assert list(block_hash_chain(t[:20], bs)) == list(ch[:2])
+    assert len(block_hash_chain(t[:7], bs)) == 0
+    # prefix property: a different tail preserves the shared prefix
+    # chains and changes every chain from the divergence point on
+    t2 = np.concatenate([t[:16], t[16:] + 1])
+    ch2 = block_hash_chain(t2, bs)
+    assert list(ch2[:2]) == list(ch[:2])
+    assert ch2[2] != ch[2] and ch2[3] != ch[3]
+    # block content is position-mixed: permuting tokens WITHIN a block
+    # changes its digest
+    t3 = t.copy()
+    t3[0], t3[1] = t3[1], t3[0]
+    assert block_hash_chain(t3, bs)[0] != ch[0]
+    # the chain threads the parent: changing block 0 perturbs chain 1
+    # even though block 1's tokens are untouched
+    assert block_hash_chain(t3, bs)[1] != ch[1]
+
+
+# ----------------------------------------- directory mechanics (manager)
+
+def _mgr(**kw):
+    kw.setdefault("total_slots", 32)
+    kw.setdefault("assoc", 4)
+    kw.setdefault("max_seqs", 4)
+    kw.setdefault("max_blocks_per_seq", 8)
+    # 4-token KV blocks: PrefixCache.match slices tokens with the
+    # manager's cfg.block_size, so the unit workloads hash at the same
+    # granularity
+    kw.setdefault("block_size", 4)
+    return HybridKVManager(HybridConfig(**kw))
+
+
+def _insert_seq(m, pc, seq_id, tokens, tbs):
+    chains = block_hash_chain(tokens, tbs)
+    parents = [CHAIN_SEED] + [int(c) for c in chains[:-1]]
+    ok = []
+    for b in range(len(chains)):
+        ok.append(pc.insert(int(chains[b]), parents[b],
+                            tokens[b * tbs:(b + 1) * tbs], seq_id, b))
+    return chains, ok
+
+
+def test_cache_insert_match_dedup_and_evict():
+    m = _mgr()
+    pc = PrefixCache(m)
+    m.register_sequence(0)
+    for b in range(4):
+        m.allocate_block(0, b)
+    tbs = 4
+    tokens = np.arange(16, dtype=np.int64)
+    chains, ok = _insert_seq(m, pc, 0, tokens, tbs)
+    assert ok == [True] * 4 and pc.n_entries == 4
+    pc.check_invariants()
+    m.check_invariants()
+    # longest-prefix match walks the chain and stops at the first miss
+    entries = pc.match(tokens, chains)
+    assert [e.chain for e in entries] == [int(c) for c in chains]
+    t2 = np.concatenate([tokens[:8], tokens[8:] + 1])
+    assert len(pc.match(t2, block_hash_chain(t2, tbs))) == 2
+    assert pc.match(tokens + 1, block_hash_chain(tokens + 1, tbs)) == []
+    # re-inserting identical content dedups (no second slot pinned)
+    _, again = _insert_seq(m, pc, 0, tokens, tbs)
+    assert again == [False] * 4 and pc.n_entries == 4
+    # every cached slot is still referenced by the live sequence
+    # (refcount 2 = flex occupancy + cache), so nothing is evictable
+    assert pc.evictable_count() == 0
+    assert pc.evict_one() is False
+    # release the sequence: the cache's references keep the slots alive
+    m.free_sequence(0)
+    m.check_invariants()
+    assert len(m.cached_slots) == 4
+    assert pc.evictable_count() == 4
+    for _ in range(4):
+        assert pc.evict_one() is True
+        pc.check_invariants()
+        m.check_invariants()
+    assert pc.evict_one() is False and pc.n_entries == 0
+    assert not m.cached_slots and not m.slot_refcount
+
+
+def test_cache_exact_verification_guards_set_collisions():
+    """Two different blocks forced into the same directory set (tiny
+    num_sets) never alias: match verifies chain, parent AND the raw
+    tokens, so a hash-set collision is a miss, not a wrong slot."""
+    m = _mgr()
+    pc = PrefixCache(m, num_sets=1, assoc=4)   # everything collides
+    m.register_sequence(0)
+    m.allocate_block(0, 0)
+    m.allocate_block(0, 1)
+    tbs = 4
+    tokens = np.arange(8, dtype=np.int64)
+    chains, ok = _insert_seq(m, pc, 0, tokens, tbs)
+    assert ok == [True, True]
+    other = tokens[:4] + 7
+    assert pc.match(other, block_hash_chain(other, tbs)) == []
+    e = pc.match(tokens, chains)
+    assert len(e) == 2 and e[0].parent == CHAIN_SEED
+    assert e[1].parent == int(chains[0])
+
+
+def test_cache_ownership_invariant_trips_on_rogue_release():
+    """Satellite 6: ``slot_refcount[s] == flex occupancy + (s in
+    cached_slots)``.  Dropping the cache's reference out-of-band (or
+    inventing a cached slot) must trip check_invariants, not corrupt the
+    pool silently."""
+    m = _mgr()
+    pc = PrefixCache(m)
+    m.register_sequence(0)
+    m.allocate_block(0, 0)
+    tbs = 4
+    tokens = np.arange(4, dtype=np.int64)
+    _insert_seq(m, pc, 0, tokens, tbs)
+    slot = next(iter(m.cached_slots))
+    m.check_invariants()
+    # rogue release of the cache's reference
+    m.slot_refcount[slot] -= 1
+    with pytest.raises(AssertionError):
+        m.check_invariants()
+    m.slot_refcount[slot] += 1
+    m.check_invariants()
+    # a "cached" slot the directory never pinned is just as illegal
+    free = m.flex_free[-1]
+    m.cached_slots.add(free)
+    with pytest.raises(AssertionError):
+        m.check_invariants()
+    m.cached_slots.discard(free)
+    m.check_invariants()
+
+
+def test_cache_pin_refuses_swap_and_double_pin():
+    m = _mgr()
+    m.register_sequence(0)
+    m.allocate_block(0, 0)
+    s = m.cache_pin_block(0, 0)
+    assert s is not None and s in m.cached_slots
+    assert m.cache_pin_block(0, 0) is None       # already cached
+    assert m.cache_pin_block(0, 3) is None       # never allocated
+    m.check_invariants()
+    m.cache_unpin_slot(s)
+    assert s not in m.cached_slots
+    m.check_invariants()
+
+
+# -------------------------------------------------- telemetry cross-checks
+
+def test_cache_telemetry_rows_sum_to_globals():
+    cfg, params = _setup()
+    _, eng = _fanout(cfg, params, True)
+    s = eng.stats()
+    pcs = s["prefix_cache"]
+    assert pcs["enabled"] is True
+    assert sum(r["cached_blocks"] for r in s["per_request"].values()) \
+        == pcs["dedup_blocks"] > 0
+    assert 0 < pcs["hits"] <= pcs["lookups"] == 6
+    assert pcs["inserts"] >= pcs["cached_blocks"] - pcs["evictions"]
+    # bytes_saved is dedup_blocks KV blocks' worth of pool bytes
+    assert pcs["bytes_saved"] > 0
+    assert pcs["bytes_saved"] % pcs["dedup_blocks"] == 0
+
+
+def test_cache_disabled_telemetry_and_modes():
+    cfg, params = _setup()
+    bs = cfg.kv_block_size
+    _, eng = _fanout(cfg, params, False, n_req=2, max_new=2)
+    pcs = eng.stats()["prefix_cache"]
+    assert pcs["enabled"] is False
+    assert pcs["lookups"] == pcs["hits"] == pcs["dedup_blocks"] == 0
+    # "auto" silently disables where content sharing cannot work...
+    ro = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_seq_len=4 * bs, mode="restrictive_only"))
+    assert ro.prefix_cache is None
+    # ...demanding it there raises with the reason
+    with pytest.raises(ValueError, match="flexible segment"):
+        Engine(cfg, params, EngineConfig(
+            max_batch=2, max_seq_len=4 * bs, mode="restrictive_only",
+            prefix_cache=True))
+
+
+# ----------------------------------------------------- legacy kwarg shim
+
+def test_share_prefix_kwargs_warn_once_and_cache_covers(monkeypatch):
+    import repro.serve.engine as engine_mod
+    monkeypatch.setattr(engine_mod, "_SHARE_KWARG_WARNED", False)
+    cfg, params = _setup()
+    bs = cfg.kv_block_size
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=2, max_seq_len=6 * bs, prefill_budget=3 * bs,
+        pool_headroom=2.0, auto_release=True))
+    rng = np.random.RandomState(5)
+    prompt = rng.randint(0, cfg.vocab_size, 3 * bs)
+    eng.submit(Request(seq_id=0, prompt=prompt, max_new_tokens=6))
+    with pytest.warns(DeprecationWarning, match="share_prefix_from"):
+        eng.submit(Request(seq_id=1, prompt=prompt, max_new_tokens=6),
+                   share_prefix_from=0, shared_blocks=2)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        eng.submit(Request(seq_id=2, prompt=prompt, max_new_tokens=6),
+                   share_prefix_from=0, shared_blocks=2)
+    assert not w, "legacy kwargs must warn exactly once"
+    outs = _drain(eng)
+    # identical greedy prompts: all three streams identical, and the
+    # kwarg requests got the dedup through the cache (pinned equivalent
+    # to a cache hit)
+    assert outs[1] == outs[0] and outs[2] == outs[0]
+    per = eng.stats()["per_request"]
+    assert per[1]["cached_blocks"] > 0
+    assert per[2]["cached_blocks"] > 0
