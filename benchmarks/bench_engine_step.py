@@ -195,6 +195,7 @@ def main() -> None:
                       f"{r['tokens_per_step_s']:8.1f} tok/s")
 
     speedups = {}
+    steady = {}
     for mode in args.modes.split(","):
         for mb in (int(b) for b in args.batches.split(",")):
             cur = next(r for r in results if r["engine"] == "current"
@@ -204,6 +205,10 @@ def main() -> None:
                        and r["mode"] == mode and r["max_batch"] == mb)
             speedups[f"{mode}_b{mb}"] = round(
                 leg["step_ms"] / cur["step_ms"], 2)
+            # the absolute steady-state latency headline, lifted to the
+            # top level so run.py's KEY_METRICS/--diff gate can track it
+            # PR-over-PR (direction: lower is better)
+            steady[f"{mode}_b{mb}"] = cur["step_ms"]
 
     record = {
         "benchmark": "engine_step",
@@ -212,6 +217,7 @@ def main() -> None:
         "jax": jax.__version__,
         "results": results,
         "speedup_vs_pre_pr": speedups,
+        "steady_step_ms": steady,
     }
     with open(args.out, "w") as f:
         json.dump(record, f, indent=1)

@@ -58,10 +58,21 @@ def summarize_times(times_s, compile_s: float | None = None,
       so the report stays honest about total wall time;
     * ``compile_ms``     — the measured warmup/compile phase wall, when
       the caller timed it (``compile_s``).
+
+    The spike threshold has a timer-granularity floor (ISSUE 9 bugfix):
+    under a coarse clock, sub-tick steps record as EXACTLY zero, and a
+    zero median would classify every nonzero step as a compile spike —
+    collapsing the "steady" set to the zero samples.  The smallest
+    nonzero sample estimates one timer tick, and the threshold never
+    drops below ``outlier_factor`` ticks.  When the median is positive
+    the floor is inert (the smallest nonzero sample is <= the median),
+    so well-resolved series summarize exactly as before.
     """
     t = np.asarray(list(times_s), np.float64)
     med = float(np.median(t))
-    spike = t > outlier_factor * med
+    pos = t[t > 0]
+    tick = float(pos.min()) if pos.size else 0.0
+    spike = t > outlier_factor * max(med, tick)
     steady = t[~spike] if bool((~spike).any()) else t
     out = {
         "step_ms": round(med * 1e3, 3),

@@ -1,4 +1,5 @@
-"""Benchmark harness: one module per paper table/figure.
+"""Benchmark harness: one module per paper table/figure, plus the
+serving-stack trajectory tools.
 
 Prints ``name,us_per_call,derived`` CSV.  Roofline terms come from
 ``benchmarks/roofline.py`` (reads the dry-run JSONs); everything here runs
@@ -8,6 +9,23 @@ live on CPU with the real mechanisms at reduced scale.
 root into ONE ``BENCH_summary.json`` trajectory table — (benchmark, key
 metric, value) rows — and prints it, so a CI log shows the perf
 trajectory of the serving stack at a glance without opening each file.
+A malformed or truncated ``BENCH_*.json`` is skipped with a warning and
+recorded under ``"skipped"`` in the summary (it must not wedge the
+gate below on an unrelated file).
+
+``--smoke`` runs the engine benchmarks that support a smoke mode into a
+scratch directory (CI keeps the scripts from bit-rotting without paying
+full measurement cost).
+
+``--diff OLD_SUMMARY.json`` is the perf-regression gate: it freshly
+aggregates the ``BENCH_*.json`` files (same rows ``--all`` writes) and
+compares them to the baseline summary per metric, with the
+direction-aware noise bands declared in ``NOISE_BANDS`` below.  A
+metric regressing beyond its band — slower where lower is better,
+smaller where higher is better — prints an offending row and exits
+nonzero; improvements and in-band drift pass.  CI diffs against the
+committed summary from the parent commit, so a PR that lands worse
+steady-state numbers fails loudly (DESIGN.md §observability).
 """
 from __future__ import annotations
 
@@ -15,6 +33,7 @@ import argparse
 import glob
 import json
 import os
+import subprocess
 import sys
 import traceback
 
@@ -22,7 +41,8 @@ sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
 from common import csv_row  # noqa: E402
 
-ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+BENCH_DIR = os.path.dirname(os.path.abspath(__file__))
+ROOT = os.path.dirname(BENCH_DIR)
 
 MODULES = [
     "bench_structure_size",     # Fig. 13
@@ -36,11 +56,21 @@ MODULES = [
     "bench_roofline_summary",   # §Roofline headline (from dry-run JSONs)
 ]
 
+# engine benchmarks with a --smoke mode (tiny configurations for CI);
+# bench_sharded needs >= 4 forced host devices and runs in its own job
+SMOKE_MODULES = [
+    "bench_sampling",
+    "bench_prefix_prefill",
+    "bench_spec_decode",
+    "bench_overload",
+    "bench_prefix_cache",
+]
+
 # the headline metric(s) to lift out of each engine benchmark's JSON:
 # dotted paths into (possibly nested) dicts; every leaf of a matched
 # dict becomes one summary row
 KEY_METRICS = {
-    "engine_step": ["speedup_vs_pre_pr"],
+    "engine_step": ["speedup_vs_pre_pr", "steady_step_ms"],
     "admission": ["speedup_batched_vs_per_request"],
     "sampling": ["sampled_over_greedy_step_ratio"],
     "prefix_prefill": ["fwd_token_ratio_recompute_over_prefix",
@@ -59,21 +89,79 @@ KEY_METRICS = {
                      "cold_miss_wall_ratio_on_over_off"],
 }
 
+# Direction-aware noise bands for the --diff gate, declared alongside
+# KEY_METRICS: metric name (the summary row's name, or its prefix
+# before the first ".") -> (better, rel_band).
+#
+# * better="higher": new < old * (1 - band) is a regression
+#   (speedups, hit/acceptance rates, dedup ratios);
+# * better="lower":  new > old * (1 + band) is a regression
+#   (latencies, latency ratios, byte footprints, preemption counts).
+#
+# Bands absorb run-to-run measurement noise on the machine that wrote
+# the committed BENCH files; deterministic metrics (byte footprints,
+# token-count ratios) get tight bands.  A metric with no entry here is
+# informational: printed in the summary, never gated.
+NOISE_BANDS = {
+    "steady_step_ms": ("lower", 0.15),
+    # ratio against the EMULATED legacy engine (a ~20x slower step
+    # measured in the same process): its run-to-run spread is far wider
+    # than the current engine's own latency, which steady_step_ms gates
+    # tightly — so this band only catches wholesale collapses
+    "speedup_vs_pre_pr": ("higher", 0.35),
+    "speedup_batched_vs_per_request": ("higher", 0.15),
+    "sampled_over_greedy_step_ratio": ("lower", 0.15),
+    "fwd_token_ratio_recompute_over_prefix": ("higher", 0.05),
+    "admission_speedup_prefix_over_recompute": ("higher", 0.25),
+    "tokens_per_s_speedup_spec_on_over_off": ("higher", 0.15),
+    "step_latency_ratio_spec_on_over_off": ("lower", 0.15),
+    "acceptance_rate": ("higher", 0.10),
+    "goodput_ratio_preempt_over_fail": ("higher", 0.15),
+    "ttft_p99_ratio_preempt_over_fail": ("lower", 0.20),
+    "preemptions_per_request": ("lower", 0.30),
+    "step_latency_ratio_vs_single_device": ("lower", 0.25),
+    "kv_bytes_per_shard": ("lower", 0.01),
+    "prefill_fwd_token_ratio_off_over_on": ("higher", 0.05),
+    "ttft_mean_ratio_on_over_off": ("lower", 0.15),
+    "peak_occupancy_ratio_on_over_off": ("lower", 0.10),
+    "cold_miss_wall_ratio_on_over_off": ("lower", 0.25),
+}
 
-def summarize_bench_jsons(root: str = ROOT,
-                          out: str | None = None) -> list:
+
+def band_for(metric: str):
+    """Noise band for a summary metric name: exact match first, then
+    the declared family prefix (``steady_step_ms.hybrid_b2`` matches
+    ``steady_step_ms``).  None = informational, never gated."""
+    if metric in NOISE_BANDS:
+        return NOISE_BANDS[metric]
+    return NOISE_BANDS.get(metric.split(".", 1)[0])
+
+
+def summarize_bench_jsons(root: str = ROOT, out: str | None = None):
     """Aggregate BENCH_*.json records into a (benchmark, metric, value)
-    trajectory table; write it to ``out`` and return the rows."""
-    rows = []
+    trajectory table; write it to ``out`` and return
+    ``(rows, skipped)``.
+
+    A file that cannot be parsed — truncated write, malformed JSON, a
+    non-object top level — is SKIPPED with a warning and recorded in
+    ``skipped``, instead of wedging the aggregation (and the --diff
+    gate downstream) on an unrelated file."""
+    rows, skipped = [], []
     for path in sorted(glob.glob(os.path.join(root, "BENCH_*.json"))):
         if os.path.basename(path) == "BENCH_summary.json":
             continue
         try:
             with open(path) as f:
                 rec = json.load(f)
-        except (OSError, json.JSONDecodeError) as e:
-            rows.append({"benchmark": os.path.basename(path),
-                         "metric": "UNREADABLE", "value": str(e)})
+            if not isinstance(rec, dict):
+                raise ValueError(
+                    f"top-level JSON is {type(rec).__name__}, not an "
+                    "object")
+        except Exception as e:   # noqa: BLE001 — any bad file: skip+warn
+            print(f"WARNING: skipping {os.path.basename(path)}: {e}",
+                  file=sys.stderr)
+            skipped.append({"file": os.path.basename(path),
+                            "error": str(e)})
             continue
         bench = rec.get("benchmark", os.path.basename(path))
         metrics = KEY_METRICS.get(bench)
@@ -93,16 +181,126 @@ def summarize_bench_jsons(root: str = ROOT,
                              "value": val})
     if out:
         with open(out, "w") as f:
-            json.dump({"summary": rows}, f, indent=1)
-    return rows
+            json.dump({"summary": rows, "skipped": skipped}, f, indent=1)
+    return rows, skipped
 
 
 def print_summary(rows) -> None:
+    if not rows:
+        print("(no BENCH_*.json rows)")
+        return
     w = max([len(r["benchmark"]) for r in rows] + [9])
     wm = max([len(r["metric"]) for r in rows] + [6])
     print(f"{'benchmark':{w}s}  {'metric':{wm}s}  value")
     for r in rows:
         print(f"{r['benchmark']:{w}s}  {r['metric']:{wm}s}  {r['value']}")
+
+
+# ------------------------------------------------- perf-regression gate
+
+def load_summary_rows(path: str) -> list:
+    """Rows of a BENCH_summary.json written by ``summarize_bench_jsons``
+    (tolerates the pre-gate format without ``skipped``)."""
+    with open(path) as f:
+        rec = json.load(f)
+    return rec["summary"] if isinstance(rec, dict) else rec
+
+
+def diff_summaries(old_rows, new_rows):
+    """Compare two summary-row lists per metric under NOISE_BANDS.
+
+    Returns ``(regressions, notes)``: ``regressions`` is one dict per
+    gated metric that moved beyond its band in the WORSE direction
+    (direction-aware — an improvement can never regress), ``notes``
+    records gated metrics present on only one side (a renamed or
+    removed benchmark is surfaced, not silently dropped)."""
+    def key(r):
+        return (r["benchmark"], r["metric"])
+
+    old = {key(r): r["value"] for r in old_rows}
+    new = {key(r): r["value"] for r in new_rows}
+    regressions, notes = [], []
+    for k in sorted(set(old) | set(new)):
+        bench, metric = k
+        band = band_for(metric)
+        if band is None:
+            continue
+        if k not in new:
+            notes.append(f"{bench}/{metric}: in baseline only")
+            continue
+        if k not in old:
+            notes.append(f"{bench}/{metric}: new metric (no baseline)")
+            continue
+        ov, nv = old[k], new[k]
+        if not all(isinstance(v, (int, float)) and not isinstance(v, bool)
+                   for v in (ov, nv)):
+            notes.append(f"{bench}/{metric}: non-numeric value")
+            continue
+        better, rel = band
+        if ov == 0:
+            notes.append(f"{bench}/{metric}: zero baseline")
+            continue
+        change = nv / ov - 1.0
+        bad = (change < -rel) if better == "higher" else (change > rel)
+        if bad:
+            regressions.append({
+                "benchmark": bench, "metric": metric,
+                "baseline": ov, "current": nv,
+                "change": change, "band": rel, "better": better,
+            })
+    return regressions, notes
+
+
+def run_diff_gate(baseline_path: str, root: str = ROOT) -> int:
+    """Aggregate fresh rows from ``root`` and gate them against the
+    baseline summary; print every offending metric row (not just a
+    nonzero exit) and return the process exit code."""
+    old_rows = load_summary_rows(baseline_path)
+    new_rows, skipped = summarize_bench_jsons(root, out=None)
+    regressions, notes = diff_summaries(old_rows, new_rows)
+    for n in notes:
+        print(f"note: {n}")
+    if skipped:
+        print(f"note: {len(skipped)} unreadable BENCH file(s) skipped: "
+              + ", ".join(s["file"] for s in skipped))
+    if not regressions:
+        print(f"perf gate PASS: {len(new_rows)} metric rows vs "
+              f"{os.path.basename(baseline_path)}, no regression beyond "
+              "the declared noise bands")
+        return 0
+    w = max(len(r["benchmark"]) + len(r["metric"]) + 1
+            for r in regressions)
+    print(f"perf gate FAIL: {len(regressions)} metric(s) regressed "
+          f"beyond their noise band vs {os.path.basename(baseline_path)}:")
+    for r in regressions:
+        name = f"{r['benchmark']}/{r['metric']}"
+        print(f"  {name:{w}s}  baseline={r['baseline']:<10g} "
+              f"current={r['current']:<10g} change={r['change']:+.1%} "
+              f"band=±{r['band']:.0%} (better: {r['better']})")
+    return 1
+
+
+def run_smoke(smoke_dir: str) -> int:
+    """Run every SMOKE_MODULES benchmark with ``--smoke`` into
+    ``smoke_dir`` and print the aggregated table; returns nonzero if
+    any script fails (CI's bit-rot canary)."""
+    os.makedirs(smoke_dir, exist_ok=True)
+    failures = []
+    for mod in SMOKE_MODULES:
+        out = os.path.join(smoke_dir, f"BENCH_{mod[len('bench_'):]}.json")
+        cmd = [sys.executable, os.path.join(BENCH_DIR, f"{mod}.py"),
+               "--smoke", "--out", out]
+        print(f"--- {mod} --smoke", flush=True)
+        res = subprocess.run(cmd)
+        if res.returncode != 0:
+            failures.append(mod)
+    rows, _ = summarize_bench_jsons(smoke_dir, out=None)
+    print()
+    print_summary(rows)
+    if failures:
+        print(f"SMOKE FAILED: {failures}", file=sys.stderr)
+        return 1
+    return 0
 
 
 def main() -> None:
@@ -113,10 +311,31 @@ def main() -> None:
     ap.add_argument("--summary-only", action="store_true",
                     help="skip the paper-figure CSV modules; only "
                          "aggregate the BENCH_*.json trajectory table")
+    ap.add_argument("--smoke", action="store_true",
+                    help="run the engine benchmarks in smoke mode into "
+                         "--smoke-dir (skips the CSV modules)")
+    ap.add_argument("--smoke-dir", default="/tmp/bench_smoke",
+                    help="where --smoke writes its BENCH_*.json files")
+    ap.add_argument("--diff", metavar="OLD_SUMMARY.json", default=None,
+                    help="perf-regression gate: aggregate fresh rows "
+                         "from --bench-root and fail on any metric "
+                         "beyond its declared noise band vs this "
+                         "baseline summary")
+    ap.add_argument("--bench-root", default=ROOT,
+                    help="directory whose BENCH_*.json files feed the "
+                         "aggregation / --diff gate (default: repo "
+                         "root)")
     args = ap.parse_args()
 
+    if args.smoke:
+        rc = run_smoke(args.smoke_dir)
+        if rc:
+            sys.exit(rc)
+    if args.diff is not None:
+        sys.exit(run_diff_gate(args.diff, args.bench_root))
+
     failures = []
-    if not args.summary_only:
+    if not (args.summary_only or args.smoke):
         print("name,us_per_call,derived")
         for mod_name in MODULES:
             try:
@@ -129,9 +348,12 @@ def main() -> None:
                 traceback.print_exc()
     if args.all or args.summary_only:
         out = os.path.join(ROOT, "BENCH_summary.json")
-        rows = summarize_bench_jsons(ROOT, out)
+        rows, skipped = summarize_bench_jsons(args.bench_root, out)
         print()
         print_summary(rows)
+        if skipped:
+            print(f"\nskipped {len(skipped)} unreadable BENCH file(s): "
+                  + ", ".join(s["file"] for s in skipped))
         print(f"\nwrote {out}")
     if failures:
         print(f"FAILED: {failures}", file=sys.stderr)

@@ -63,7 +63,7 @@ def main() -> None:
                        sampling=SamplingParams(temperature=0.8, top_k=40,
                                                seed=7)))
 
-    t0 = time.time()
+    t0 = time.perf_counter()   # monotonic: NTP-immune duration
     results = {}
     for out in eng.stream():
         queued = len(eng.waiting)
@@ -71,7 +71,7 @@ def main() -> None:
         print(f"step {eng.step_count:2d}: seq {out.seq_id} "
               f"+{list(out.new_token_ids)}{tag} (queued={queued})")
         results[out.seq_id] = out
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
 
     print(f"\ngenerated in {dt:.2f}s over {eng.step_count} steps:")
     for sid, out in sorted(results.items()):

@@ -206,12 +206,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
     sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
     import hlo_analysis
 
-    t0 = time.time()
+    # monotonic clock for durations: time.time() can jump under NTP
+    t0 = time.perf_counter()
     lowered, meta = build_cell(arch, shape_name, multi_pod, perf_variant)
-    t_lower = time.time() - t0
-    t0 = time.time()
+    t_lower = time.perf_counter() - t0
+    t0 = time.perf_counter()
     compiled = lowered.compile()
-    t_compile = time.time() - t0
+    t_compile = time.perf_counter() - t0
 
     mem = compiled.memory_analysis()
     ca = hlo_analysis.normalize_cost_analysis(compiled.cost_analysis())
@@ -302,14 +303,14 @@ def main() -> None:
                 p = subprocess.Popen(cmd, env=env,
                                      stdout=subprocess.PIPE,
                                      stderr=subprocess.STDOUT, text=True)
-                running.append((tag, p, out, time.time()))
+                running.append((tag, p, out, time.perf_counter()))
             time.sleep(1.0)
             for item in list(running):
                 tag, p, out, t0 = item
                 if p.poll() is None:
                     continue
                 running.remove(item)
-                dt = time.time() - t0
+                dt = time.perf_counter() - t0
                 if p.returncode == 0 and os.path.exists(out):
                     print(f"PASS {tag} ({dt:.0f}s)")
                 else:

@@ -5,7 +5,8 @@
         [--prefill-budget 128] [--scheduler fifo|spf|priority] \\
         [--temperature 0.8 --top-k 40 --top-p 0.95 --seed 0] \\
         [--spec-decode --num-draft-tokens 4] [--data 1 --model 2] \\
-        [--shared-prefix-blocks 4] [--no-prefix-cache]
+        [--shared-prefix-blocks 4] [--no-prefix-cache] \\
+        [--metrics[=PATH] --metrics-every 10]
 
 Drives the request-centric engine API: requests are submitted up front
 with per-request SamplingParams, the configured Scheduler admits them
@@ -14,6 +15,15 @@ the budget), finished sequences auto-release so their slots recycle,
 and generation is consumed as a stream of RequestOutput snapshots.  The
 run prints throughput plus translation statistics — global (RSW hit
 rate, migrations, swaps) and attributed per request.
+
+``--metrics`` attaches a live ``MetricsLogger`` (serve/metrics.py) and
+prints a one-line rolling dashboard — tokens/s, step p50/p99, pool
+occupancy, RestSeg hit rate, spec acceptance, prefix-cache hit rate,
+preempt/resume — every ``--metrics-every`` steps; ``--metrics=PATH``
+additionally streams every per-step event to a JSONL file.  All run and
+per-request latencies come from the logger's monotonic clock
+(``time.perf_counter`` — wall-clock ``time.time`` is NTP-step-prone),
+so the dashboard and the printout cannot disagree.
 """
 from __future__ import annotations
 
@@ -25,7 +35,8 @@ import numpy as np
 
 from repro.configs import get_config, reduced as reduce_cfg
 from repro.models import model_dims, init_params
-from repro.serve import Engine, EngineConfig, Request, SamplingParams
+from repro.serve import (Engine, EngineConfig, JsonlSink, MetricsLogger,
+                         Request, SamplingParams)
 
 
 def main() -> None:
@@ -75,8 +86,22 @@ def main() -> None:
                          "TAR/SF/flex tables (DESIGN.md §sharded-serving)."
                          " On CPU set XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N first")
+    ap.add_argument("--metrics", nargs="?", const="", default=None,
+                    metavar="PATH",
+                    help="attach the live MetricsLogger and print a "
+                         "rolling one-line dashboard; with a PATH, also "
+                         "stream per-step events to a JSONL file")
+    ap.add_argument("--metrics-every", type=int, default=10,
+                    help="dashboard print interval in engine steps "
+                         "(with --metrics)")
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
+
+    # the logger is always attached (it is host-side arithmetic only and
+    # provably stream-invisible); --metrics controls what gets SHOWN
+    sinks = [JsonlSink(args.metrics)] if args.metrics else []
+    logger = MetricsLogger(sinks)
+    show_metrics = args.metrics is not None
 
     cfg = reduce_cfg(get_config(args.arch)) if args.reduced \
         else get_config(args.arch)
@@ -102,6 +127,7 @@ def main() -> None:
         spec_decode="ngram" if args.spec_decode else None,
         num_draft_tokens=args.num_draft_tokens,
         prefix_cache=False if args.no_prefix_cache else "auto",
+        metrics=logger,
         mesh_shape=((args.data, args.model)
                     if (args.data, args.model) != (1, 1) else None)))
     def sampling(sid):
@@ -115,7 +141,10 @@ def main() -> None:
     rng = np.random.RandomState(0)
     shared = rng.randint(0, cfg.vocab_size,
                          args.shared_prefix_blocks * bs)
-    t0 = time.time()
+    # monotonic clock: wall-clock time.time() measures an NTP step as
+    # request latency (the ISSUE 9 bugfix) — the MetricsLogger uses
+    # perf_counter too, so the dashboard and this printout agree
+    t0 = time.perf_counter()
     for sid in range(args.requests):
         frontend = (rng.randn(cfg.frontend_tokens, cfg.d_model)
                     .astype(np.float32) if cfg.frontend != "none" else None)
@@ -127,9 +156,18 @@ def main() -> None:
             frontend=frontend, max_new_tokens=args.max_new,
             sampling=sampling(sid), priority=sid % 3))
     tokens = 0
-    for out in eng.stream():
-        tokens += len(out.new_token_ids)
-    dt = time.time() - t0
+    shown_at = 0
+    while eng.has_unfinished():
+        for out in eng.poll():
+            tokens += len(out.new_token_ids)
+        if (show_metrics
+                and eng.step_count - shown_at >= args.metrics_every):
+            print(logger.dashboard_line(), flush=True)
+            shown_at = eng.step_count
+    if show_metrics and eng.step_count != shown_at:
+        print(logger.dashboard_line(), flush=True)
+    logger.close()
+    dt = time.perf_counter() - t0
     steps = eng.step_count
     spec_note = (f", spec K={args.num_draft_tokens}" if eng.spec_K
                  else "")
@@ -164,10 +202,14 @@ def main() -> None:
         if eng.spec_K:
             spec_row = (f" accepted={row['accepted']}/{row['drafted']}"
                         f" ({row['accepted'] / max(row['drafted'], 1):.0%})")
+        # submit-to-finish latency, from the logger's monotonic clock —
+        # the single source the dashboard reads too
+        lat = logger.request_latencies.get(sid)
+        lat_row = f" latency={lat * 1e3:.0f}ms" if lat is not None else ""
         print(f"  seq {sid}: rsw_hits={row['rsw_hits']}/{seen} "
               f"flex_walks={row['flex_walks']} "
               f"swap_faults={row['swap_faults']} "
-              f"cached_blocks={row['cached_blocks']}{spec_row}")
+              f"cached_blocks={row['cached_blocks']}{lat_row}{spec_row}")
 
 
 if __name__ == "__main__":

@@ -4,6 +4,8 @@ from .decode import (DecodeSpec, make_decode_spec, make_serve_step,
                      translate_step_sharded)
 from .engine import (ChunkRecord, Engine, EngineConfig, Request,
                      RequestOutput)
+from .metrics import (MetricsLogger, MetricsSink, MemorySink, JsonlSink,
+                      RollingWindow)
 from .sampling import SamplingParams
 from .scheduler import (Scheduler, FIFOScheduler, ShortestPromptFirst,
                         PriorityAgingScheduler, make_scheduler, SCHEDULERS)
@@ -13,7 +15,9 @@ __all__ = ["DecodeSpec", "make_decode_spec", "make_serve_step",
            "init_decode_state", "abstract_decode_state",
            "decode_state_shardings", "translate_step",
            "translate_step_sharded", "ChunkRecord", "Engine",
-           "EngineConfig", "Request", "RequestOutput", "SamplingParams",
+           "EngineConfig", "Request", "RequestOutput", "MetricsLogger",
+           "MetricsSink", "MemorySink", "JsonlSink", "RollingWindow",
+           "SamplingParams",
            "Scheduler", "FIFOScheduler", "ShortestPromptFirst",
            "PriorityAgingScheduler", "make_scheduler", "SCHEDULERS",
            "make_spec_decode_step", "propose_ngram_drafts"]

@@ -92,6 +92,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 import warnings
 from collections import defaultdict
 from typing import Any, Dict, List, NamedTuple, Optional, Tuple
@@ -219,6 +220,12 @@ class EngineConfig:
     # cached prefix read-only and only the tail runs prefill; token
     # streams stay bit-identical to a cache-off run.
     prefix_cache: Any = "auto"
+    # a serve.metrics.MetricsLogger (or None): the engine feeds it one
+    # host-side event per step (counter deltas + occupancy gauges) and
+    # request submit/finish lifecycle events.  Purely observational —
+    # no device operation, token streams bit-identical logger-on vs
+    # logger-off (pinned in tests/test_metrics.py).
+    metrics: Any = None
 
 
 class ChunkRecord(NamedTuple):
@@ -300,10 +307,15 @@ class RequestState:
     # (rows sum exactly to the global dedup_blocks counter)
     cached_blocks: int = 0
     # overload bookkeeping: step of the latest commit (the LRU key for
-    # victim selection) and how often this request was preempted (the
-    # aggregate is surfaced via stats()["overload"])
+    # victim selection) and how often this request was preempted /
+    # resumed.  The aggregates in stats()["overload"] are SEPARATE
+    # monotone engine counters, not sums over these rows: a finished
+    # request's row is dropped on seq_id reuse, and a global that
+    # summed rows would silently shrink (rows + dropped == global is
+    # the pinned invariant).
     last_step: int = 0
     preempts: int = 0
+    resumes: int = 0
 
 
 @dataclasses.dataclass
@@ -488,6 +500,23 @@ class Engine:
         # detector treats any of them as progress (a step that only
         # rearranges residency is not a stuck step)
         self._progress_events = 0
+        # monotone engine-level preempt/resume counters.  These are NOT
+        # derived from the per-request rows: a finished request's state
+        # is dropped when its seq_id is reused, so a sum over
+        # ``self._states`` silently loses counts.  The dropped share is
+        # tracked too — sum(rows) + dropped == global is an invariant
+        # ``check_invariants`` asserts.
+        self._request_preempts = 0
+        self._request_resumes = 0
+        self._dropped_preempts = 0
+        self._dropped_resumes = 0
+        # monotone count of tokens committed to any stream (decode,
+        # spec commit, prefill first-tokens): the metrics logger's
+        # per-step tokens delta and the dashboard tokens/s numerator
+        self._tokens_emitted = 0
+        # live metrics stream (serve/metrics.py): fed one host-side
+        # event per step; None = zero overhead on the hot path
+        self.metrics = config.metrics
         self.scheduler: Scheduler = make_scheduler(config.scheduler)
         # a scheduler instance is MUTABLE state: sharing one between two
         # engines (e.g. via a reused EngineConfig holding an instance)
@@ -668,6 +697,12 @@ class Engine:
                 f"seq_id {req.seq_id} finished but still holds its "
                 f"sequence slot; call release({req.seq_id}) first or "
                 "construct the engine with auto_release=True")
+        if old is not None:
+            # the old incarnation's telemetry row is about to be
+            # dropped: bank its preempt/resume counts so the monotone
+            # globals stay reconcilable (sum(rows) + dropped == global)
+            self._dropped_preempts += old.preempts
+            self._dropped_resumes += old.resumes
         self.finished.pop(req.seq_id, None)   # forget a finished reuse
         self._chain_cache.pop(req.seq_id, None)   # fresh chains on reuse
         if share_prefix_from is not None and shared_blocks:
@@ -681,6 +716,8 @@ class Engine:
         object.__setattr__(req, "_engine_state", state)
         self._states[req.seq_id] = state
         self.scheduler.add(req, state.arrival)
+        if self.metrics is not None:
+            self.metrics.on_submit(req.seq_id, self._step_count)
 
     def add_request(self, req: Request,
                     share_prefix_from: Optional[int] = None,
@@ -1122,6 +1159,7 @@ class Engine:
         self._swap_bytes_out += rec.nbytes
         self._attribute_swap(self._shard_swap_out, rec, mapped)
         st.preempts += 1
+        self._request_preempts += 1
         self._progress_events += 1
         self.scheduler.add(req, st.arrival)
         self._sync_translation()
@@ -1192,6 +1230,8 @@ class Engine:
             self._shard_swap_in, rec,
             [m.lookup(sid, b)[0] for b, _ in rec.blocks])
         st.last_step = self._step_count
+        st.resumes += 1
+        self._request_resumes += 1
         self._progress_events += 1
         return True
 
@@ -1481,6 +1521,7 @@ class Engine:
         st = self._states[req.seq_id]
         st.generated.append(nxt)
         st.new_tokens.append(nxt)
+        self._tokens_emitted += 1
         self._maybe_finish(st, nxt)
 
     def _finish(self, st: RequestState, reason: str) -> None:
@@ -1488,6 +1529,9 @@ class Engine:
         st.finish_reason = reason
         if self.auto_release and st.request.seq_id in self._slot_of:
             self.release(st.request.seq_id)
+        if self.metrics is not None:
+            self.metrics.on_finish(st.request.seq_id, self._step_count,
+                                   len(st.generated), reason)
 
     def _maybe_finish(self, st: RequestState, nxt: int) -> None:
         if st.done:
@@ -1648,7 +1692,24 @@ class Engine:
         step (the scalar contract preserved for direct-step drivers).
         Consume the full stream through ``poll()`` / ``stream()`` —
         their ``RequestOutput.new_token_ids`` carry every committed
-        token — or ``Request.generated``."""
+        token — or ``Request.generated``.
+
+        With a ``MetricsLogger`` attached (``EngineConfig.metrics``)
+        each step additionally emits one host-side event — wall time on
+        the monotonic clock, counter deltas, occupancy gauges — after
+        the commit.  The logger path performs no device operation, so
+        logger-on streams are bit-identical to logger-off."""
+        if self.metrics is None:
+            return self._step_impl()
+        t0 = time.perf_counter()
+        out = self._step_impl()
+        wall = time.perf_counter() - t0
+        self.metrics.on_step(self._step_count, wall,
+                             self._metrics_counters(),
+                             self._metrics_gauges())
+        return out
+
+    def _step_impl(self) -> Dict[int, int]:
         self._step_count += 1
         if self._injector is not None:
             # safe point #1: before admission — a forced "pre" preempt
@@ -1764,6 +1825,7 @@ class Engine:
                     st.generated.append(nxt)
                     st.new_tokens.append(nxt)
                     st.last_step = self._step_count
+                    self._tokens_emitted += 1
                     out[sid] = nxt
                     self._maybe_finish(st, nxt)
         for r, _ in pending:
@@ -1830,6 +1892,7 @@ class Engine:
             st.drafted += K
             st.accepted += max(committed - 1, 0)
             st.last_step = self._step_count
+            self._tokens_emitted += committed
             self._spec_drafted += K
             self._spec_accepted += max(committed - 1, 0)
             if cap <= 0 and not st.done:
@@ -1961,6 +2024,50 @@ class Engine:
         return int((k.nbytes + self.dstate["v_pool"].nbytes)
                    // max(n_slots, 1))
 
+    # -------------------------------------------------------- live metrics
+    def _metrics_counters(self) -> Dict[str, Any]:
+        """ABSOLUTE monotone counters for the metrics logger (it
+        differentiates them into per-step deltas).  Host-side reads
+        only — the logger's totals agree with ``stats()`` at every step
+        by construction (pinned in tests/test_metrics.py)."""
+        m = self.manager
+        pc = self.prefix_cache
+        c: Dict[str, Any] = {
+            "tokens": self._tokens_emitted,
+            "rsw_hits": int(m.stats.get("rsw_hits", 0)),
+            "flex_walks": int(m.stats.get("flex_walks", 0)),
+            "swap_faults": int(m.stats.get("faults", 0)),
+            "spec_drafted": self._spec_drafted,
+            "spec_accepted": self._spec_accepted,
+            "request_preempts": self._request_preempts,
+            "request_resumes": self._request_resumes,
+            "swap_bytes_out": self._swap_bytes_out,
+            "swap_bytes_in": self._swap_bytes_in,
+            "prefix_lookups": int(pc.stats["lookups"]) if pc else 0,
+            "prefix_hits": int(pc.stats["hits"]) if pc else 0,
+        }
+        if self.partition is not None:
+            c["shard_swap_bytes_out"] = [int(x)
+                                         for x in self._shard_swap_out]
+            c["shard_swap_bytes_in"] = [int(x)
+                                        for x in self._shard_swap_in]
+        return c
+
+    def _metrics_gauges(self) -> Dict[str, Any]:
+        """Point-in-time gauges copied into the step event verbatim."""
+        m = self.manager
+        total = self.hybrid_cfg.total_slots
+        mapped = sum(1 for i in m.blocks.values() if i.slot >= 0)
+        return {
+            "pool_blocks": total,
+            "mapped_blocks": mapped,
+            "occupancy": mapped / max(total, 1),
+            "live": sum(1 for sid in self.requests
+                        if not self._states[sid].done),
+            "queued": len(self.waiting),
+            "host_tier_seqs": len(self._preempted),
+        }
+
     def stats(self) -> dict:
         """Global manager counters plus ``"per_request"``: RestSeg hits /
         flexible walks / swap faults — and, under speculative decoding,
@@ -1976,14 +2083,22 @@ class Engine:
         # overload/host-tier telemetry (ISSUE 6): sequence-granularity
         # preempt/resume counts, current host-tier residency, and the
         # host<->device swap traffic in bytes
+        # request_preempts/resumes are MONOTONE engine counters, not
+        # sums over the per-request rows: a finished request's row is
+        # dropped on seq_id reuse, so a row sum would silently shrink.
+        # The dropped share is surfaced too — sum(per-request rows) +
+        # dropped == global (asserted in check_invariants, pinned with
+        # a reuse test).
         s["overload"] = {
             "preempted_seqs": int(self.manager.stats.get("preempt_out", 0)),
             "resumed_seqs": int(self.manager.stats.get("preempt_in", 0)),
             "host_tier_seqs": len(self._preempted),
             "swap_bytes_out": self._swap_bytes_out,
             "swap_bytes_in": self._swap_bytes_in,
-            "request_preempts": sum(st.preempts
-                                    for st in self._states.values()),
+            "request_preempts": self._request_preempts,
+            "request_resumes": self._request_resumes,
+            "dropped_request_preempts": self._dropped_preempts,
+            "dropped_request_resumes": self._dropped_resumes,
         }
         # prefix-cache telemetry: the per-request cached_blocks rows sum
         # exactly to the global dedup_blocks counter (same attribution
@@ -2005,7 +2120,8 @@ class Engine:
             sid: {"rsw_hits": st.rsw_hits, "flex_walks": st.flex_walks,
                   "swap_faults": st.swap_faults, "drafted": st.drafted,
                   "accepted": st.accepted,
-                  "cached_blocks": st.cached_blocks}
+                  "cached_blocks": st.cached_blocks,
+                  "preempts": st.preempts, "resumes": st.resumes}
             for sid, st in self._states.items()}
         if self.partition is not None:
             # per-shard view: each key sums EXACTLY to its global above
@@ -2031,6 +2147,16 @@ class Engine:
         self.manager.check_invariants()
         if self.prefix_cache is not None:
             self.prefix_cache.check_invariants()
+        # preempt/resume accounting: the monotone globals must equal the
+        # surviving per-request rows plus the counts banked when rows
+        # were dropped on seq_id reuse (ISSUE 9 bugfix — the old row-sum
+        # global silently shrank on reuse)
+        assert (sum(st.preempts for st in self._states.values())
+                + self._dropped_preempts == self._request_preempts), \
+            "per-request preempts + dropped != global request_preempts"
+        assert (sum(st.resumes for st in self._states.values())
+                + self._dropped_resumes == self._request_resumes), \
+            "per-request resumes + dropped != global request_resumes"
         m = self.manager
         tar = np.asarray(jax.device_get(self.dstate["tar"]))[0]
         sf = np.asarray(jax.device_get(self.dstate["sf"]))[0]

@@ -1,0 +1,219 @@
+"""Benchmark harness robustness + the perf-regression gate (ISSUE 9).
+
+``benchmarks/`` is not a package; ``run.py`` and ``common.py`` are
+loaded by file path.  Pinned here:
+
+* a malformed/truncated ``BENCH_*.json`` is skipped with a warning and
+  recorded under ``"skipped"`` — it must not wedge the aggregation (or
+  the --diff gate) on an unrelated file (ISSUE 9 satellite 3);
+* ``diff_summaries`` is direction-aware: a 20% step-latency regression
+  on a "lower is better" metric trips the gate, the same-magnitude
+  IMPROVEMENT passes, in-band drift passes, and an identical summary
+  diffs clean;
+* every gated metric family in ``KEY_METRICS`` has a ``NOISE_BANDS``
+  direction (a new headline metric without a declared direction would
+  silently escape the gate);
+* ``summarize_times`` under a coarse timer: a zero median must not
+  classify every nonzero sample as a compile spike (ISSUE 9
+  satellite 2 — the timer-granularity floor).
+"""
+import importlib.util
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+
+BENCH_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "benchmarks")
+
+
+def _load(name):
+    spec = importlib.util.spec_from_file_location(
+        f"bench_{name}", os.path.join(BENCH_DIR, f"{name}.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+run_mod = _load("run")
+common = _load("common")
+
+
+# ------------------------------------------------- robust aggregation
+
+def _write(path, rec):
+    with open(path, "w") as f:
+        if isinstance(rec, str):
+            f.write(rec)
+        else:
+            json.dump(rec, f)
+
+
+def test_summarize_skips_malformed_bench_files(tmp_path, capsys):
+    """One valid record, one truncated write, one non-object top level:
+    the valid rows survive, the bad files land in ``skipped`` (both in
+    the return value and the written summary), and a warning names
+    each."""
+    _write(tmp_path / "BENCH_sampling.json",
+           {"benchmark": "sampling",
+            "sampled_over_greedy_step_ratio": 1.4})
+    _write(tmp_path / "BENCH_truncated.json",
+           '{"benchmark": "overload", "goodput')
+    _write(tmp_path / "BENCH_notdict.json", [1, 2, 3])
+    out = tmp_path / "BENCH_summary.json"
+    rows, skipped = run_mod.summarize_bench_jsons(str(tmp_path), str(out))
+    assert rows == [{"benchmark": "sampling",
+                     "metric": "sampled_over_greedy_step_ratio",
+                     "value": 1.4}]
+    assert sorted(s["file"] for s in skipped) == [
+        "BENCH_notdict.json", "BENCH_truncated.json"]
+    err = capsys.readouterr().err
+    assert "BENCH_truncated.json" in err and "BENCH_notdict.json" in err
+    rec = json.load(open(out))
+    assert rec["summary"] == rows
+    assert [s["file"] for s in rec["skipped"]] == \
+        [s["file"] for s in skipped]
+    # the summary itself is never re-ingested as an input file
+    rows2, skipped2 = run_mod.summarize_bench_jsons(str(tmp_path), None)
+    assert rows2 == rows and len(skipped2) == 2
+
+
+def test_summarize_expands_dict_metrics(tmp_path):
+    """Dict-valued headline metrics expand to one dotted row per key —
+    the shape the NOISE_BANDS prefix matching relies on."""
+    _write(tmp_path / "BENCH_engine_step.json",
+           {"benchmark": "engine_step",
+            "speedup_vs_pre_pr": {"hybrid_b2": 3.1},
+            "steady_step_ms": {"hybrid_b2": 2.7, "hybrid_b4": 3.9}})
+    rows, _ = run_mod.summarize_bench_jsons(str(tmp_path), None)
+    assert {(r["metric"], r["value"]) for r in rows} == {
+        ("speedup_vs_pre_pr.hybrid_b2", 3.1),
+        ("steady_step_ms.hybrid_b2", 2.7),
+        ("steady_step_ms.hybrid_b4", 3.9)}
+
+
+# --------------------------------------------------- perf-regression gate
+
+def _rows(**metrics):
+    return [{"benchmark": "engine_step", "metric": m, "value": v}
+            for m, v in metrics.items()]
+
+
+def test_diff_identical_summaries_pass():
+    rows = _rows(**{"steady_step_ms.hybrid_b2": 2.7,
+                    "speedup_vs_pre_pr.hybrid_b2": 3.0})
+    regs, notes = run_mod.diff_summaries(rows, rows)
+    assert regs == [] and notes == []
+
+
+def test_diff_catches_synthetic_20pct_latency_regression():
+    """The acceptance-criteria scenario: steady step latency 20% worse
+    than baseline on a 15% band -> gate trips, and the offending row
+    carries enough to print (baseline, current, change, band)."""
+    old = _rows(**{"steady_step_ms.hybrid_b2": 2.7})
+    new = _rows(**{"steady_step_ms.hybrid_b2": 2.7 * 1.2})
+    regs, _ = run_mod.diff_summaries(old, new)
+    assert len(regs) == 1
+    r = regs[0]
+    assert r["metric"] == "steady_step_ms.hybrid_b2"
+    assert r["better"] == "lower" and r["band"] == 0.15
+    assert r["change"] == pytest.approx(0.2)
+
+
+def test_diff_is_direction_aware():
+    """A 20% IMPROVEMENT on the same 'lower' metric passes; a 'higher'
+    metric (speedup) regresses by SHRINKING, not growing."""
+    old = _rows(**{"steady_step_ms.hybrid_b2": 2.7,
+                   "speedup_vs_pre_pr.hybrid_b2": 3.0})
+    faster = _rows(**{"steady_step_ms.hybrid_b2": 2.7 / 1.2,
+                      "speedup_vs_pre_pr.hybrid_b2": 3.0 * 1.2})
+    regs, _ = run_mod.diff_summaries(old, faster)
+    assert regs == []
+    slower = _rows(**{"steady_step_ms.hybrid_b2": 2.7,
+                      "speedup_vs_pre_pr.hybrid_b2": 3.0 * 0.5})
+    regs, _ = run_mod.diff_summaries(old, slower)
+    assert [r["metric"] for r in regs] == ["speedup_vs_pre_pr.hybrid_b2"]
+
+
+def test_diff_in_band_drift_and_unknown_metrics_pass():
+    old = _rows(**{"steady_step_ms.hybrid_b2": 2.7,
+                   "some_informational_metric": 10.0})
+    new = _rows(**{"steady_step_ms.hybrid_b2": 2.7 * 1.10,   # in band
+                   "some_informational_metric": 99.0})       # ungated
+    regs, _ = run_mod.diff_summaries(old, new)
+    assert regs == []
+
+
+def test_diff_surfaces_one_sided_metrics_as_notes():
+    old = _rows(**{"steady_step_ms.hybrid_b2": 2.7})
+    new = _rows(**{"steady_step_ms.hybrid_b4": 3.9})
+    regs, notes = run_mod.diff_summaries(old, new)
+    assert regs == []
+    assert any("in baseline only" in n for n in notes)
+    assert any("no baseline" in n for n in notes)
+
+
+def test_every_key_metric_has_a_noise_band():
+    """Gate coverage: each headline metric family declared in
+    KEY_METRICS must carry a NOISE_BANDS direction, or a regression in
+    it would silently pass."""
+    for bench, metrics in run_mod.KEY_METRICS.items():
+        for m in metrics:
+            band = run_mod.band_for(m)
+            assert band is not None, f"{bench}/{m} has no noise band"
+            better, rel = band
+            assert better in ("higher", "lower") and 0 < rel < 1
+
+
+def test_gate_end_to_end_against_committed_summary(tmp_path):
+    """The CI step, in miniature: the committed BENCH files diff clean
+    against their own committed summary, and an injected 20% latency
+    regression (baseline rewritten 1.2x faster) exits nonzero."""
+    root = os.path.dirname(BENCH_DIR)
+    committed = os.path.join(root, "BENCH_summary.json")
+    if not os.path.exists(committed):
+        pytest.skip("no committed BENCH_summary.json")
+    assert run_mod.run_diff_gate(committed, root) == 0
+    rows = run_mod.load_summary_rows(committed)
+    n = 0
+    for r in rows:
+        if r["metric"].startswith("steady_step_ms"):
+            r["value"] = r["value"] / 1.2
+            n += 1
+    if n == 0:
+        pytest.skip("committed summary predates steady_step_ms")
+    inj = tmp_path / "injected.json"
+    _write(inj, {"summary": rows, "skipped": []})
+    assert run_mod.run_diff_gate(str(inj), root) == 1
+
+
+# ------------------------------------------- summarize_times timer floor
+
+def test_summarize_times_zero_median_coarse_clock():
+    """ISSUE 9 satellite 2: on a coarse clock most steps record as
+    exactly 0.0 and the median is zero; the old ``3 * median``
+    threshold classified EVERY nonzero step as a compile spike.  With
+    the timer-granularity floor the nonzero ticks stay in the steady
+    set."""
+    times = [0.0] * 6 + [0.001] * 4
+    out = common.summarize_times(times)
+    assert out["n_compile_spikes"] == 0
+    assert out["n_steady_steps"] == 10
+    assert out["step_ms_mean"] == pytest.approx(0.4)
+    assert out["step_ms"] == 0.0          # the median is honestly zero
+
+
+def test_summarize_times_still_flags_real_spikes():
+    """The floor is inert on well-resolved series: a genuine compile
+    spike is still excluded from the steady mean and reported."""
+    times = [0.002] * 10 + [0.250]
+    out = common.summarize_times(times)
+    assert out["n_compile_spikes"] == 1
+    assert out["compile_spike_ms"] == pytest.approx(250.0)
+    assert out["step_ms_mean"] == pytest.approx(2.0)
+    assert out["n_steady_steps"] == 10
+    # all-zero pathological input: no crash, nothing flagged
+    z = common.summarize_times([0.0] * 5)
+    assert z["n_compile_spikes"] == 0 and z["step_ms"] == 0.0

@@ -1,0 +1,325 @@
+"""Live metrics stream (ISSUE 9 tentpole).
+
+Contracts pinned here:
+
+* ``RollingWindow`` medians/percentiles equal a numpy oracle computed
+  over the same trailing window, through ring-buffer wraparound;
+* attaching a ``MetricsLogger`` is stream-invisible: token streams are
+  bit-identical logger-on vs logger-off across greedy/sampled x spec
+  on/off, and on a real (1, 2) mesh (the logger is host-side
+  arithmetic — no device op, no PRNG draw);
+* the JSONL sink round-trips: ``read_jsonl(path)`` equals the
+  ``MemorySink`` event list from the same run;
+* the logger's re-integrated ``totals`` agree with ``Engine.stats()``
+  counters at EVERY step of an overload run (preempt/resume, swap
+  bytes, spec, prefix-cache — the deltas it emits sum back to the
+  engine's monotone truth);
+* per-request submit-to-finish latencies come from the injected
+  monotonic clock.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import model_dims, init_params
+from repro.serve import (Engine, EngineConfig, JsonlSink, MemorySink,
+                         MetricsLogger, Request, RollingWindow)
+from repro.serve.metrics import STEP_COUNTER_KEYS, read_jsonl
+from repro.serve.sampling import SamplingParams
+
+SRC = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "src")
+
+_SETUP_CACHE = {}
+
+
+def _setup(arch="granite-8b"):
+    if arch not in _SETUP_CACHE:
+        cfg = dataclasses.replace(reduced(ARCHS[arch]), num_layers=2)
+        dims = model_dims(cfg, tp=1)
+        params = init_params(jax.random.PRNGKey(2), cfg, dims)
+        _SETUP_CACHE[arch] = (cfg, params)
+    return _SETUP_CACHE[arch]
+
+
+def _drain(eng, max_steps=900):
+    outs = {}
+    for _ in range(max_steps):
+        for ro in eng.poll():
+            outs.setdefault(ro.seq_id, []).extend(ro.new_token_ids)
+        if not eng.has_unfinished():
+            return outs
+    raise AssertionError("engine failed to drain")
+
+
+def _run(cfg, params, *, metrics=None, headroom=0.5, n_req=8, max_new=10,
+         sampling=None, **ekw):
+    bs = cfg.kv_block_size
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_seq_len=8 * bs, pool_headroom=headroom,
+        auto_release=True, metrics=metrics, **ekw))
+    rng = np.random.RandomState(7)
+    for i in range(n_req):
+        eng.submit(Request(
+            seq_id=i, prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+            max_new_tokens=max_new,
+            sampling=sampling if sampling is not None
+            else SamplingParams()))
+    return _drain(eng), eng
+
+
+# ------------------------------------------------------- rolling window
+
+def test_rolling_window_matches_numpy_oracle():
+    """Median/p99 of the window equal numpy over the same trailing
+    slice, at every push — including after the ring wraps."""
+    rng = np.random.RandomState(0)
+    feed = rng.exponential(3.0, 300)
+    w = RollingWindow(64)
+    for i, x in enumerate(feed):
+        w.push(x)
+        ref = feed[max(0, i + 1 - 64):i + 1]
+        assert len(w) == len(ref)
+        np.testing.assert_allclose(w.values(), ref)
+        assert w.median() == pytest.approx(float(np.median(ref)))
+        assert w.percentile(99) == pytest.approx(
+            float(np.percentile(ref, 99)))
+        assert w.sum() == pytest.approx(float(ref.sum()))
+
+
+def test_rolling_window_edge_cases():
+    w = RollingWindow(4)
+    assert len(w) == 0 and w.median() == 0.0 and w.percentile(99) == 0.0
+    w.push(5.0)
+    assert w.median() == 5.0
+    with pytest.raises(ValueError):
+        RollingWindow(0)
+
+
+# --------------------------------------------------------- sink plumbing
+
+def test_jsonl_sink_round_trips_memory_sink(tmp_path):
+    """The JSONL file replays to exactly the event list an in-memory
+    sink captured from the same logger."""
+    path = str(tmp_path / "events.jsonl")
+    mem = MemorySink()
+    log = MetricsLogger([mem, JsonlSink(path)])
+    cfg, params = _setup()
+    _run(cfg, params, metrics=log, n_req=4, max_new=6)
+    log.close()
+    replay = read_jsonl(path)
+    assert replay == mem.events
+    kinds = [e["kind"] for e in replay]
+    assert kinds.count("submit") == 4 and kinds.count("finish") == 4
+    assert kinds.count("step") == log.n_steps > 0
+    # step events carry every declared counter delta + the gauges
+    step0 = next(e for e in replay if e["kind"] == "step")
+    for k in STEP_COUNTER_KEYS:
+        assert k in step0
+    for k in ("occupancy", "mapped_blocks", "pool_blocks", "live",
+              "queued", "host_tier_seqs", "wall_s"):
+        assert k in step0
+
+
+def test_logger_context_manager_closes_sinks(tmp_path):
+    path = str(tmp_path / "ev.jsonl")
+    with MetricsLogger([JsonlSink(path)]) as log:
+        log.on_submit(0, 0)
+    assert log.sinks[0]._f.closed
+    assert [e["kind"] for e in read_jsonl(path)] == ["submit"]
+
+
+# ------------------------------------------------- stream invisibility
+
+@pytest.mark.parametrize("spec,sampling", [
+    (None, None),
+    (None, SamplingParams(temperature=0.8, top_k=40, seed=123)),
+    ("ngram", None),
+    ("ngram", SamplingParams(temperature=0.8, top_k=40, seed=123)),
+], ids=["greedy", "sampled", "spec-greedy", "spec-sampled"])
+def test_streams_bit_identical_logger_on_vs_off(spec, sampling):
+    """The tentpole's safety contract: the logger observes, never
+    perturbs.  Same overloaded workload (preempt/resume cycles
+    included), token streams must match exactly with and without it."""
+    cfg, params = _setup()
+    off, _ = _run(cfg, params, metrics=None, sampling=sampling,
+                  spec_decode=spec)
+    log = MetricsLogger([MemorySink()])
+    on, eng = _run(cfg, params, metrics=log, sampling=sampling,
+                   spec_decode=spec)
+    assert on == off
+    assert log.n_steps == eng.step_count > 0
+    eng.check_invariants()
+
+
+def test_streams_bit_identical_on_mesh():
+    """(1, 2)-sharded engine with the logger attached streams
+    identically to the single-device logger-off run; per-shard swap
+    deltas in the events sum to the global swap counters.  Subprocess
+    pins 8 host devices before importing jax (test_sharded_serve
+    recipe)."""
+    script = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import dataclasses
+        import numpy as np, jax
+        from repro.configs import ARCHS, reduced
+        from repro.models import model_dims, init_params
+        from repro.serve import (Engine, EngineConfig, MemorySink,
+                                 MetricsLogger, Request)
+        cfg = dataclasses.replace(reduced(ARCHS["granite-8b"]),
+                                  num_layers=2)
+        dims = model_dims(cfg, tp=1)
+        params = init_params(jax.random.PRNGKey(2), cfg, dims)
+        bs = cfg.kv_block_size
+
+        def run(mesh, log):
+            eng = Engine(cfg, params, EngineConfig(
+                max_batch=4, max_seq_len=8 * bs, pool_headroom=0.5,
+                auto_release=True, mesh_shape=mesh, metrics=log))
+            rng = np.random.RandomState(7)
+            for i in range(12):
+                eng.submit(Request(
+                    seq_id=i,
+                    prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                    max_new_tokens=20))
+            outs = {}
+            for _ in range(900):
+                for ro in eng.poll():
+                    outs.setdefault(ro.seq_id, []).extend(
+                        ro.new_token_ids)
+                if not eng.has_unfinished():
+                    break
+            eng.check_invariants()
+            return outs, eng
+
+        base, _ = run(None, None)
+        mem = MemorySink()
+        log = MetricsLogger([mem])
+        got, eng = run((1, 2), log)
+        assert got == base, "sharded logger-on stream diverged"
+        steps = [e for e in mem.events if e["kind"] == "step"]
+        assert steps and all("shard_swap_bytes_out" in e for e in steps)
+        ov = eng.stats()["overload"]
+        tot_out = sum(sum(e["shard_swap_bytes_out"]) for e in steps)
+        tot_in = sum(sum(e["shard_swap_bytes_in"]) for e in steps)
+        assert tot_out == ov["swap_bytes_out"] > 0
+        assert tot_in == ov["swap_bytes_in"] > 0
+        print("ALL_OK")
+    """)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0 and "ALL_OK" in out.stdout, (
+        out.stdout[-2000:], out.stderr[-4000:])
+
+
+# -------------------------------------------- stats() <-> logger oracle
+
+def test_logger_totals_agree_with_stats_every_step():
+    """Drive an overloaded spec-decode run one ``step()`` at a time and
+    cross-check the logger's re-integrated ``totals`` against
+    ``Engine.stats()`` after EVERY step — the deltas it emitted sum
+    back to the engine's monotone counters with no drift, through
+    preempt/resume and swap traffic."""
+    cfg, params = _setup()
+    bs = cfg.kv_block_size
+    mem = MemorySink()
+    log = MetricsLogger([mem])
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_seq_len=8 * bs, pool_headroom=0.5,
+        auto_release=True, spec_decode="ngram", metrics=log))
+    rng = np.random.RandomState(7)
+    for i in range(12):
+        eng.submit(Request(
+            seq_id=i, prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+            max_new_tokens=20))
+    for _ in range(900):
+        eng.step()
+        # step() returns only the LAST token per sequence (spec commits
+        # several); the emitted-token truth is the generated streams
+        emitted = sum(len(s.generated) for s in eng._states.values())
+        st = eng.stats()
+        ov = st["overload"]
+        pc = st["prefix_cache"]
+        expect = {
+            "tokens": emitted,
+            "rsw_hits": st.get("rsw_hits", 0),
+            "flex_walks": st.get("flex_walks", 0),
+            "swap_faults": st.get("faults", 0),
+            "spec_drafted": st["spec_drafted"],
+            "spec_accepted": st["spec_accepted"],
+            "request_preempts": ov["request_preempts"],
+            "request_resumes": ov["request_resumes"],
+            "swap_bytes_out": ov["swap_bytes_out"],
+            "swap_bytes_in": ov["swap_bytes_in"],
+            "prefix_lookups": pc["lookups"],
+            "prefix_hits": pc["hits"],
+        }
+        assert log.totals == expect, f"drift at step {eng.step_count}"
+        if not eng.has_unfinished():
+            break
+    assert not eng.has_unfinished()
+    assert log.totals["request_preempts"] > 0, "overload never hit"
+    # the per-step deltas in the event stream re-integrate to totals
+    steps = [e for e in mem.events if e["kind"] == "step"]
+    for k in STEP_COUNTER_KEYS:
+        assert sum(e[k] for e in steps) == log.totals[k]
+    # deltas are per-step accounts of monotone counters: never negative
+    assert all(e[k] >= 0 for e in steps for k in STEP_COUNTER_KEYS)
+    eng.check_invariants()
+
+
+# ------------------------------------------------- rollups + lifecycle
+
+def test_rolling_and_dashboard_and_latency():
+    """``rolling()`` exposes the headline rates, the dashboard line
+    renders them, and every finished request has a latency from the
+    injected clock (here: a fake monotone counter, so values are exact
+    and NTP-immune by construction)."""
+    t = [0.0]
+
+    def fake_clock():
+        t[0] += 1.0
+        return t[0]
+
+    cfg, params = _setup()
+    log = MetricsLogger([MemorySink()], window=8, clock=fake_clock)
+    outs, eng = _run(cfg, params, metrics=log, n_req=6, max_new=8)
+    r = log.rolling()
+    assert r["steps"] == eng.step_count
+    assert r["window_steps"] == min(8, eng.step_count)
+    assert r["tokens_per_s"] > 0
+    assert 0.0 <= r["rsw_hit_rate"] <= 1.0
+    assert 0.0 <= r["occupancy"] <= 1.0
+    assert r["step_ms_p99"] >= r["step_ms_p50"] > 0
+    line = log.dashboard_line()
+    assert "tok/s" in line and "p99" in line and "occ" in line
+    # submit-to-finish latency recorded for every request, strictly
+    # positive on the fake monotone clock
+    assert set(log.request_latencies) == set(outs)
+    assert all(v > 0 for v in log.request_latencies.values())
+
+
+def test_rsw_hit_rate_reflects_translation_mode():
+    """restrictive_only serves every decode-step translation from the
+    RestSeg walker: the rolling RestSeg hit rate must be 1.0; a
+    flexible_only run must be 0.0 (pure flex walks)."""
+    cfg, params = _setup()
+    log = MetricsLogger()
+    _run(cfg, params, metrics=log, headroom=2.0, n_req=4, max_new=8,
+         mode="restrictive_only")
+    assert log.rolling()["rsw_hit_rate"] == 1.0
+    log2 = MetricsLogger()
+    _run(cfg, params, metrics=log2, headroom=2.0, n_req=4, max_new=8,
+         mode="flexible_only")
+    assert log2.rolling()["rsw_hit_rate"] == 0.0

@@ -513,8 +513,62 @@ def test_overload_stats_block_and_per_request_shape():
     ov = s["overload"]
     assert set(ov) == {"preempted_seqs", "resumed_seqs", "host_tier_seqs",
                        "swap_bytes_out", "swap_bytes_in",
-                       "request_preempts"}
+                       "request_preempts", "request_resumes",
+                       "dropped_request_preempts",
+                       "dropped_request_resumes"}
     assert ov["preempted_seqs"] > 0
+    assert ov["request_resumes"] == ov["request_preempts"]
     for row in s["per_request"].values():
         assert set(row) == {"rsw_hits", "flex_walks", "swap_faults",
-                            "drafted", "accepted", "cached_blocks"}
+                            "drafted", "accepted", "cached_blocks",
+                            "preempts", "resumes"}
+    # no ids were reused in this run: the rows carry the whole account
+    assert (sum(r["preempts"] for r in s["per_request"].values())
+            == ov["request_preempts"])
+
+
+def test_request_preempt_counts_survive_seq_id_reuse():
+    """ISSUE 9 satellite 1: ``request_preempts`` used to be a sum of
+    ``st.preempts`` over ``self._states`` — resubmitting a finished
+    seq_id replaced its state and the preempt history silently
+    vanished.  Now the globals are MONOTONE engine counters; submit()
+    banks the dropped row's counts, and
+    ``sum(per-request rows) + dropped == global`` holds across reuse
+    (also asserted by ``Engine.check_invariants``)."""
+    cfg, params = _setup()
+    bs = cfg.kv_block_size
+    inj = ServeFaultInjector(preempt_at=[(2, "post", 0), (4, "pre", 1)])
+    eng = Engine(cfg, params, EngineConfig(
+        max_batch=4, max_seq_len=8 * bs, pool_headroom=2.0,
+        auto_release=True, fault_injector=inj))
+    rng = np.random.RandomState(3)
+
+    def submit_round():
+        for i in range(3):
+            eng.submit(Request(
+                seq_id=i, prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                max_new_tokens=6))
+
+    submit_round()
+    _drain(eng)
+    s = eng.stats()
+    ov = s["overload"]
+    assert ov["request_preempts"] == 2 == ov["request_resumes"]
+    assert ov["dropped_request_preempts"] == 0
+    assert sum(r["preempts"] for r in s["per_request"].values()) == 2
+
+    # reuse EVERY seq_id: submit() drops the finished rows and banks
+    # their counts — the pre-fix row sum reported 0 preempts here
+    submit_round()
+    _drain(eng)
+    s = eng.stats()
+    ov = s["overload"]
+    assert ov["request_preempts"] == 2 == ov["request_resumes"]  # monotone
+    assert ov["dropped_request_preempts"] == 2
+    assert ov["dropped_request_resumes"] == 2
+    rows = s["per_request"]
+    assert sum(r["preempts"] for r in rows.values()) == 0   # fresh rows
+    assert sum(r["resumes"] for r in rows.values()) == 0
+    assert (sum(r["preempts"] for r in rows.values())
+            + ov["dropped_request_preempts"] == ov["request_preempts"])
+    eng.check_invariants()
