@@ -64,6 +64,7 @@ SMOKE_MODULES = [
     "bench_spec_decode",
     "bench_overload",
     "bench_prefix_cache",
+    "bench_recovery",
 ]
 
 # the headline metric(s) to lift out of each engine benchmark's JSON:
@@ -87,6 +88,10 @@ KEY_METRICS = {
                      "ttft_mean_ratio_on_over_off",
                      "peak_occupancy_ratio_on_over_off",
                      "cold_miss_wall_ratio_on_over_off"],
+    "recovery": ["snapshot_overhead_ratio",
+                 "snapshot_ms_mean",
+                 "restore_ms",
+                 "recovery_speedup_replay_over_cold"],
 }
 
 # Direction-aware noise bands for the --diff gate, declared alongside
@@ -125,6 +130,13 @@ NOISE_BANDS = {
     "ttft_mean_ratio_on_over_off": ("lower", 0.15),
     "peak_occupancy_ratio_on_over_off": ("lower", 0.10),
     "cold_miss_wall_ratio_on_over_off": ("lower", 0.25),
+    # amortized analytically from snapshot_ms (see bench_recovery
+    # docstring), so the ratio itself is near-deterministic; the raw
+    # per-call timings carry the usual CPU-timer noise
+    "snapshot_overhead_ratio": ("lower", 0.02),
+    "snapshot_ms_mean": ("lower", 0.50),
+    "restore_ms": ("lower", 0.50),
+    "recovery_speedup_replay_over_cold": ("higher", 0.30),
 }
 
 

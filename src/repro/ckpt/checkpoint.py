@@ -8,13 +8,26 @@ Layout: <dir>/step_<n>/
 * **Async**: ``save`` snapshots device arrays to host memory synchronously
   (cheap) and writes to disk on a background thread — the train loop keeps
   stepping (overlap of I/O with compute).
-* **Atomic**: the COMMIT marker makes half-written checkpoints (killed
-  host) invisible to ``latest_step``; restarts fall back to the last
-  complete one.
+* **Atomic**: every marker file (manifest, COMMIT) is written to a temp
+  name and ``os.replace``-d into place, and the step directory itself is
+  assembled under a ``.tmp_`` name and renamed last — a crash at ANY
+  point mid-``save`` leaves either the previous committed step or an
+  uncommitted temp dir that ``latest_step`` ignores, never a
+  half-written step that ``restore`` trusts.
+* **Self-healing restore**: a committed step whose shard is corrupt or
+  truncated (torn write below the COMMIT rename, bit rot) is skipped
+  with a warning and the previous committed step restored instead —
+  the serving twin of the benchmark harness's skip-and-warn policy —
+  rather than raising and leaving the caller unrecoverable.
 * **Elastic restore**: leaves are saved *unsharded per host shard* with
   global metadata, so a restore may target a different mesh/topology —
   arrays are re-sharded by the caller's shardings (``restore`` returns
   numpy; the launcher device_puts with the new mesh's shardings).
+* **Named-array checkpoints**: ``save_named``/``restore_named`` persist a
+  flat ``{name: array}`` dict without a treedef or target shapes —
+  entries may change shape between steps (the serving engine's pickled
+  host state does), which the positional ``save``/``restore`` pair's
+  shape check forbids.
 * Retention: ``keep_last`` checkpoints are retained, older ones pruned.
 """
 from __future__ import annotations
@@ -24,10 +37,24 @@ import os
 import shutil
 import threading
 import time
-from typing import Any, Dict, List, Optional
+import warnings
+import zipfile
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+def _write_atomic(path: str, data: str) -> None:
+    """Write ``data`` to ``path`` via a temp file + ``os.replace`` so a
+    crash mid-write can never leave a truncated file under the final
+    name (the manifest/COMMIT durability hole this PR closes)."""
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        f.write(data)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 class CheckpointManager:
@@ -39,40 +66,63 @@ class CheckpointManager:
         self.save_count = 0
 
     # ------------------------------------------------------------- saving
+    def _write_step(self, step: int, named: Dict[str, np.ndarray],
+                    extra_manifest: Dict[str, Any]) -> None:
+        """Assemble step_<n> under a temp dir and rename it into place."""
+        tmp = os.path.join(self.dir, f".tmp_step_{step}")
+        final = os.path.join(self.dir, f"step_{step}")
+        # a stale temp dir from a previous crashed save must not leak
+        # old shards into this attempt
+        shutil.rmtree(tmp, ignore_errors=True)
+        os.makedirs(tmp)
+        np.savez(os.path.join(tmp, "shard_0.npz"), **named)
+        manifest = {
+            "step": step,
+            "n_leaves": len(named),
+            "names": list(named),
+            "leaves": [{"shape": list(a.shape), "dtype": str(a.dtype)}
+                       for a in named.values()],
+            "time": time.time(),
+        }
+        manifest.update(extra_manifest)
+        _write_atomic(os.path.join(tmp, "manifest.json"),
+                      json.dumps(manifest))
+        _write_atomic(os.path.join(tmp, "COMMIT"), "ok")
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._prune()
+        self.save_count += 1
+
     def save(self, step: int, state, blocking: bool = False) -> None:
         """Snapshot now; write in the background (unless blocking)."""
         flat, treedef = jax.tree.flatten(state)
         host_flat = [np.asarray(x) for x in flat]   # device -> host snapshot
         self.wait()                                  # one writer at a time
-
-        def write():
-            tmp = os.path.join(self.dir, f".tmp_step_{step}")
-            final = os.path.join(self.dir, f"step_{step}")
-            os.makedirs(tmp, exist_ok=True)
-            np.savez(os.path.join(tmp, "shard_0.npz"),
-                     **{str(i): a for i, a in enumerate(host_flat)})
-            manifest = {
-                "step": step,
-                "n_leaves": len(host_flat),
-                "treedef": str(treedef),
-                "leaves": [{"shape": list(a.shape), "dtype": str(a.dtype)}
-                           for a in host_flat],
-                "time": time.time(),
-            }
-            with open(os.path.join(tmp, "manifest.json"), "w") as f:
-                json.dump(manifest, f)
-            with open(os.path.join(tmp, "COMMIT"), "w") as f:
-                f.write("ok")
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)
-            self._prune()
-            self.save_count += 1
+        named = {str(i): a for i, a in enumerate(host_flat)}
+        extra = {"treedef": str(treedef)}
 
         if blocking:
-            write()
+            self._write_step(step, named, extra)
         else:
-            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread = threading.Thread(
+                target=self._write_step, args=(step, named, extra),
+                daemon=True)
+            self._thread.start()
+
+    def save_named(self, step: int, arrays: Dict[str, np.ndarray],
+                   blocking: bool = False) -> None:
+        """Persist a flat ``{name: array}`` dict (shapes may vary between
+        steps — no treedef is recorded and ``restore_named`` needs no
+        target structure)."""
+        host = {str(k): np.asarray(v) for k, v in arrays.items()}
+        self.wait()
+        if blocking:
+            self._write_step(step, host, {"named": True})
+        else:
+            self._thread = threading.Thread(
+                target=self._write_step, args=(step, host, {"named": True}),
+                daemon=True)
             self._thread.start()
 
     def wait(self) -> None:
@@ -99,19 +149,54 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def _load_shard(self, step: int) -> Dict[str, np.ndarray]:
+        """Read one step's shard fully into memory; raises on corruption
+        (the fallback loops below catch and skip)."""
+        path = os.path.join(self.dir, f"step_{step}", "shard_0.npz")
+        with np.load(path) as z:
+            return {k: z[k] for k in z.files}
+
+    def _load_with_fallback(self, step: Optional[int]
+                            ) -> Tuple[Dict[str, np.ndarray], int]:
+        """Load ``step`` (default: latest), falling back to the previous
+        committed step — with a warning naming the corrupt one — when a
+        shard is truncated/corrupt.  Raises only when NO committed step
+        is readable."""
+        steps = self.all_steps()
+        if not steps:
+            raise FileNotFoundError(
+                f"no committed checkpoint in {self.dir}")
+        if step is None:
+            step = steps[-1]
+        candidates = [s for s in steps if s <= step]
+        if not candidates:
+            raise FileNotFoundError(
+                f"no committed checkpoint at or before step {step} in "
+                f"{self.dir}")
+        for s in reversed(candidates):
+            try:
+                return self._load_shard(s), s
+            except (OSError, zipfile.BadZipFile, ValueError, KeyError,
+                    EOFError) as e:
+                warnings.warn(
+                    f"checkpoint step_{s} is corrupt or truncated "
+                    f"({type(e).__name__}: {e}); falling back to the "
+                    "previous committed step", stacklevel=3)
+        raise FileNotFoundError(
+            f"every committed checkpoint at or before step {step} in "
+            f"{self.dir} is corrupt")
+
     def restore(self, state_like, step: Optional[int] = None):
         """Returns a pytree of numpy arrays shaped like ``state_like``.
 
         ``state_like`` may be ShapeDtypeStructs (elastic restore onto a new
-        mesh: caller device_puts with new shardings afterwards).
+        mesh: caller device_puts with new shardings afterwards).  A
+        corrupt/truncated shard under a COMMIT marker is skipped with a
+        warning and the previous committed step restored instead; the
+        returned step says which one actually loaded.
         """
-        if step is None:
-            step = self.latest_step()
-        if step is None:
-            raise FileNotFoundError(f"no committed checkpoint in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step}")
-        with np.load(os.path.join(path, "shard_0.npz")) as z:
-            flat = [z[str(i)] for i in range(len(z.files))]
+        shard, step = self._load_with_fallback(step)
+        flat = [shard[str(i)] for i in range(len(shard))]
         _, treedef = jax.tree.flatten(state_like)
         restored = jax.tree.unflatten(treedef, flat)
         # shape check against the target
@@ -121,3 +206,9 @@ class CheckpointManager:
                     f"checkpoint leaf {got.shape} != target {tgt.shape} — "
                     "elastic restore requires matching global shapes")
         return restored, step
+
+    def restore_named(self, step: Optional[int] = None
+                      ) -> Tuple[Dict[str, np.ndarray], int]:
+        """Load a ``save_named`` checkpoint back as ``{name: array}``,
+        with the same corrupt-shard skip-and-warn fallback."""
+        return self._load_with_fallback(step)

@@ -175,6 +175,18 @@ class HybridKVManager:
         self.partition = None
         self.shard_stats: List[Dict[str, int]] = []
 
+    def __getstate__(self):
+        """Pickle support (engine snapshot/restore): the resolved hash
+        callable may not be picklable (vectorized/partial-backed
+        registries) — drop it and re-derive from ``cfg.hash_name``."""
+        state = dict(self.__dict__)
+        state.pop("hash", None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self.hash = get_hash(self.cfg.hash_name)
+
     def set_partition(self, partition) -> None:
         """Attach a :class:`core.partition.Partition`: every subsequent
         ``record_device_stats`` also attributes rsw_hits (to the shard

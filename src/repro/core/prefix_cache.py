@@ -113,7 +113,8 @@ class PrefixCache:
         # instead of via pool pressure
         self.num_sets = (max(1, cfg.total_slots // assoc)
                          if num_sets is None else num_sets)
-        self.hash = get_hash(hash_name or cfg.hash_name)
+        self.hash_name = hash_name or cfg.hash_name
+        self.hash = get_hash(self.hash_name)
         self.srrip = SRRIP(self.num_sets, assoc)
         self.ways: List[List[Optional[CacheEntry]]] = [
             [None] * assoc for _ in range(self.num_sets)]
@@ -123,6 +124,19 @@ class PrefixCache:
     @property
     def n_entries(self) -> int:
         return self._n
+
+    def __getstate__(self):
+        """Pickle support (engine snapshot/restore): drop the resolved
+        hash callable, re-derive from the stored name on load.  ``mgr``
+        pickles along WITH the cache — inside an engine snapshot the
+        memo keeps it the same object as the engine's manager."""
+        state = dict(self.__dict__)
+        state.pop("hash", None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self.hash = get_hash(self.hash_name)
 
     # -------------------------------------------------------------- lookup
     def _find(self, chain: int, parent: int, tokens: np.ndarray

@@ -94,8 +94,27 @@ def main() -> None:
     ap.add_argument("--metrics-every", type=int, default=10,
                     help="dashboard print interval in engine steps "
                          "(with --metrics)")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="crash-safe serving: wrap the engine in "
+                         "ResilientServe and snapshot every N steps "
+                         "(0 = off; DESIGN.md §crash-recovery)")
+    ap.add_argument("--snapshot-dir", default=None,
+                    help="persist snapshots through ckpt."
+                         "CheckpointManager under this directory "
+                         "(implies --snapshot-every 10 if unset)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="bounded restart budget before the supervisor "
+                         "re-raises the fault (with --snapshot-every)")
+    ap.add_argument("--crash-at", default=None, metavar="STEPS",
+                    help="kill-and-recover demo: inject an "
+                         "InjectedStepFault at these engine steps "
+                         "(comma list) — with --snapshot-every the "
+                         "supervisor restores and replays; streams are "
+                         "bit-identical to an uncrashed run")
     ap.add_argument("--reduced", action="store_true", default=True)
     args = ap.parse_args()
+    if args.snapshot_dir is not None and args.snapshot_every == 0:
+        args.snapshot_every = 10
 
     # the logger is always attached (it is host-side arithmetic only and
     # provably stream-invisible); --metrics controls what gets SHOWN
@@ -112,6 +131,11 @@ def main() -> None:
     # no speculative headroom: a verify window overrunning the last KV
     # block is re-verified, not committed, so spec-on and spec-off run
     # the same pool sizing (stats stay apples-to-apples)
+    injector = None
+    if args.crash_at:
+        from repro.runtime import ServeFaultInjector
+        injector = ServeFaultInjector(crash_at=[
+            (int(s), "pre") for s in args.crash_at.split(",")])
     eng = Engine(cfg, params, EngineConfig(
         max_batch=args.max_batch,
         max_seq_len=S + cfg.frontend_tokens + args.max_new + bs,
@@ -128,8 +152,21 @@ def main() -> None:
         num_draft_tokens=args.num_draft_tokens,
         prefix_cache=False if args.no_prefix_cache else "auto",
         metrics=logger,
+        fault_injector=injector,
         mesh_shape=((args.data, args.model)
                     if (args.data, args.model) != (1, 1) else None)))
+    sup = None
+    if args.snapshot_every > 0:
+        from repro.runtime import ResilientServe
+        ckpt_mgr = None
+        if args.snapshot_dir is not None:
+            from repro.ckpt import CheckpointManager
+            ckpt_mgr = CheckpointManager(args.snapshot_dir)
+        sup = ResilientServe(eng, ckpt_mgr,
+                             snapshot_every=args.snapshot_every,
+                             max_restarts=args.max_restarts)
+    drv = sup if sup is not None else eng
+
     def sampling(sid):
         # distinct per-request PRNG streams: one shared seed would make
         # identical prompts produce identical "sampled" token streams
@@ -151,14 +188,14 @@ def main() -> None:
         prompt = np.concatenate([
             shared, rng.randint(0, cfg.vocab_size,
                                 args.prompt_blocks * bs)])
-        eng.submit(Request(
+        drv.submit(Request(
             seq_id=sid, prompt=prompt,
             frontend=frontend, max_new_tokens=args.max_new,
             sampling=sampling(sid), priority=sid % 3))
     tokens = 0
     shown_at = 0
-    while eng.has_unfinished():
-        for out in eng.poll():
+    while drv.has_unfinished():
+        for out in drv.poll():
             tokens += len(out.new_token_ids)
         if (show_metrics
                 and eng.step_count - shown_at >= args.metrics_every):
@@ -178,7 +215,21 @@ def main() -> None:
           f"({tokens / dt:.1f} tok/s, {steps} engine steps, "
           f"budget={eng.prefill_budget} tok/step, "
           f"temp={args.temperature}{spec_note})")
-    st = eng.stats()
+    st = drv.stats()
+    life = st.get("lifecycle", {})
+    if sup is not None:
+        rec = st["recovery"]
+        print(f"recovery: restarts={rec['restarts']}/"
+              f"{rec['max_restarts']} snapshots={rec['snapshots']} "
+              f"(every {rec['snapshot_every']} steps, last at step "
+              f"{rec['last_snapshot_step']}) "
+              f"replayed_steps={rec['replayed_steps']} "
+              f"dedup_tokens={rec['dedup_tokens']} "
+              f"persisted={rec['persisted']} "
+              f"cancelled={life.get('cancelled', 0)} "
+              f"deadline_expired={life.get('deadline_expired', 0)}")
+        if sup.ckpt is not None:
+            sup.ckpt.wait()
     total = st.get("rsw_hits", 0) + st.get("flex_walks", 0)
     print(f"translation: rsw_hit_rate="
           f"{st.get('rsw_hits', 0) / max(total, 1):.2%} "

@@ -1,3 +1,5 @@
 from .fault import (FaultInjector, ServeFaultInjector, InjectedFault,
                     InjectedStepFault, InjectedAllocFault,
-                    StragglerMonitor, ResilientLoop, LoopReport)
+                    StragglerMonitor, StepWatchdog, ResilientLoop,
+                    LoopReport)
+from .resilient_serve import ResilientServe, ReplayDivergence

@@ -92,6 +92,14 @@ class ServeFaultInjector:
       speculative window's verify/commit and the next dispatch).
       ``target`` is a seq_id or ``"auto"`` (the engine's victim policy
       picks).  Each entry fires once.
+    * ``crash_at``: iterable of ``(step, phase)`` — the ONE schedule
+      that DOES raise: an :class:`InjectedStepFault` at the named step
+      boundary (phase ``"pre"``: before the step mutated anything;
+      ``"post"``: after the step's full commit).  This simulates the
+      process dying — the engine makes no attempt to stay consistent
+      across it, and recovery is restore-from-snapshot
+      (``runtime/resilient_serve.py``), never unwinding.  Each entry
+      fires once.
     * ``seed`` + ``alloc_fail_rate``/``preempt_rate``: random chaos from
       a seeded ``np.random.RandomState`` — a given (seed, workload) run
       is exactly reproducible.
@@ -102,7 +110,7 @@ class ServeFaultInjector:
     :class:`InjectedFault` taxonomy names.
     """
 
-    def __init__(self, alloc_fail_at=(), preempt_at=(),
+    def __init__(self, alloc_fail_at=(), preempt_at=(), crash_at=(),
                  seed: Optional[int] = None,
                  alloc_fail_rate: float = 0.0,
                  preempt_rate: float = 0.0):
@@ -113,6 +121,12 @@ class ServeFaultInjector:
                 raise ValueError(f"unknown preempt phase {phase!r} "
                                  "(expected 'pre' or 'post')")
             self._forced[(int(step), str(phase))].append(target)
+        self._crash = set()
+        for step, phase in crash_at:
+            if phase not in ("pre", "post"):
+                raise ValueError(f"unknown crash phase {phase!r} "
+                                 "(expected 'pre' or 'post')")
+            self._crash.add((int(step), str(phase)))
         self._rng = (np.random.RandomState(seed)
                      if seed is not None else None)
         self.alloc_fail_rate = float(alloc_fail_rate)
@@ -142,12 +156,25 @@ class ServeFaultInjector:
             self.log.append(("preempt", int(step), str(phase), t))
         return out
 
+    def maybe_crash(self, step: int, phase: str) -> None:
+        """Raise :class:`InjectedStepFault` if a crash is scheduled at
+        this step boundary (fires once; the event is logged FIRST so a
+        post-mortem sees the crash that killed the run)."""
+        key = (int(step), str(phase))
+        if key in self._crash:
+            self._crash.discard(key)
+            self.log.append(("crash", key[0], key[1]))
+            raise InjectedStepFault(
+                f"injected serve crash at step {key[0]} ({key[1]})")
+
     def faults(self) -> Dict[str, int]:
         """Fired-event counts keyed by taxonomy kind."""
-        out: Dict[str, int] = {InjectedAllocFault.kind: 0, "preempt": 0}
+        out: Dict[str, int] = {InjectedAllocFault.kind: 0, "preempt": 0,
+                               InjectedStepFault.kind: 0}
         for ev in self.log:
-            out[InjectedAllocFault.kind
-                if ev[0] == "alloc" else "preempt"] += 1
+            out[{"alloc": InjectedAllocFault.kind,
+                 "crash": InjectedStepFault.kind}.get(ev[0],
+                                                      "preempt")] += 1
         return out
 
 
@@ -185,6 +212,40 @@ class StragglerMonitor:
             return []
         return [int(h) for h in np.nonzero(
             self.seen & (self.ema > self.threshold * med))[0]]
+
+
+class StepWatchdog:
+    """Hung-dispatch detector for the serving loop, built on
+    :class:`StragglerMonitor`.
+
+    A single serving process has no peer hosts to compare against, so
+    the watchdog treats the engine's OWN smoothed step time as the
+    population: each step is recorded into a one-host monitor's EMA and
+    flagged when it exceeds ``threshold`` x the EMA of the steps before
+    it (the same threshold semantics the multi-host monitor applies
+    against the median host).  ``warmup`` steps are exempt — the first
+    dispatches pay XLA compilation and would always flag.
+    """
+
+    def __init__(self, threshold: float = 10.0, alpha: float = 0.3,
+                 warmup: int = 3):
+        self._mon = StragglerMonitor(1, alpha=alpha, threshold=threshold)
+        self.threshold = threshold
+        self.warmup = warmup
+        self.seen = 0
+        self.flags: List[Tuple[int, float]] = []   # (step index, wall s)
+
+    def record(self, step_time: float) -> bool:
+        """Feed one step's wall time; True when it flagged as hung
+        (recorded AFTER the check so the hung step does not drag the
+        baseline up before judging itself)."""
+        self.seen += 1
+        hung = (self.seen > self.warmup and self._mon.seen[0]
+                and step_time > self.threshold * float(self._mon.ema[0]))
+        if hung:
+            self.flags.append((self.seen, float(step_time)))
+        self._mon.record(0, step_time)
+        return bool(hung)
 
 
 @dataclasses.dataclass

@@ -2,8 +2,8 @@ from .decode import (DecodeSpec, make_decode_spec, make_serve_step,
                      init_decode_state, abstract_decode_state,
                      decode_state_shardings, translate_step,
                      translate_step_sharded)
-from .engine import (ChunkRecord, Engine, EngineConfig, Request,
-                     RequestOutput)
+from .engine import (ChunkRecord, Engine, EngineConfig, EngineSnapshot,
+                     Request, RequestOutput, SNAPSHOT_VERSION)
 from .metrics import (MetricsLogger, MetricsSink, MemorySink, JsonlSink,
                       RollingWindow)
 from .sampling import SamplingParams
@@ -15,7 +15,8 @@ __all__ = ["DecodeSpec", "make_decode_spec", "make_serve_step",
            "init_decode_state", "abstract_decode_state",
            "decode_state_shardings", "translate_step",
            "translate_step_sharded", "ChunkRecord", "Engine",
-           "EngineConfig", "Request", "RequestOutput", "MetricsLogger",
+           "EngineConfig", "EngineSnapshot", "SNAPSHOT_VERSION",
+           "Request", "RequestOutput", "MetricsLogger",
            "MetricsSink", "MemorySink", "JsonlSink", "RollingWindow",
            "SamplingParams",
            "Scheduler", "FIFOScheduler", "ShortestPromptFirst",

@@ -92,6 +92,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import pickle
 import time
 import warnings
 from collections import defaultdict
@@ -262,6 +263,14 @@ class Request:
     eos_token: Optional[int] = None
     sampling: SamplingParams = GREEDY
     priority: int = 0
+    # wall-clock budget from submission, in milliseconds (None = no
+    # deadline).  ``poll()`` cancels the request — wherever it is:
+    # queued, mid-chunk prefill, decoding, or parked on the host tier —
+    # once the budget elapses, releasing its slot, cache pins and
+    # ledger claims; the stream finishes with finish_reason="deadline".
+    # The clock is the monotonic ``time.perf_counter`` (NTP-immune);
+    # across a snapshot/restore the REMAINING budget carries over.
+    deadline_ms: Optional[float] = None
 
     def __post_init__(self):
         p = np.array(self.prompt, copy=True)
@@ -291,7 +300,12 @@ class RequestState:
     arrival: int                     # engine step at submission (aging)
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
-    finish_reason: Optional[str] = None     # "stop" | "length"
+    # "stop" | "length" | "cancelled" | "deadline"
+    finish_reason: Optional[str] = None
+    # absolute monotonic deadline (perf_counter seconds), set at submit
+    # from Request.deadline_ms; snapshot/restore rebases it so only the
+    # REMAINING budget survives a crash
+    deadline_at: Optional[float] = None
     new_tokens: List[int] = dataclasses.field(default_factory=list)
     finish_reported: bool = False
     # per-request translation telemetry (stats()["per_request"])
@@ -345,13 +359,66 @@ class RequestOutput:
 
     ``new_token_ids`` — tokens produced since the previous poll;
     ``token_ids`` — all tokens generated so far; ``finish_reason`` —
-    ``"stop"`` (eos) or ``"length"`` (max_new_tokens) once finished.
+    ``"stop"`` (eos), ``"length"`` (max_new_tokens), ``"cancelled"``
+    (``Engine.cancel``) or ``"deadline"`` (``Request.deadline_ms``
+    elapsed) once finished.
     """
     seq_id: int
     new_token_ids: Tuple[int, ...]
     token_ids: Tuple[int, ...]
     finished: bool
     finish_reason: Optional[str]
+
+
+# ------------------------------------------------------- crash-safe snapshot
+
+SNAPSHOT_VERSION = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineSnapshot:
+    """Complete serving state at a step boundary (DESIGN.md
+    §crash-recovery).
+
+    ``dstate`` holds HOST (numpy) copies of every decode-state device
+    array EXCEPT the TAR/SF/flex translation mirrors — the host tables
+    inside ``host_blob`` are authoritative for those, and
+    ``Engine.restore`` rebuilds the device mirrors through the existing
+    full-sync path.  ``host_blob`` pickles the whole host side in one
+    dump (manager + prefix cache + scheduler + request states + the
+    host KV tier + monotone counters), so shared references — the
+    cache's manager pointer, a ``Request`` reachable from both the
+    scheduler queue and ``_states`` — survive as the SAME object on
+    restore.
+
+    ``to_arrays``/``from_arrays`` flatten to a ``{name: ndarray}`` dict
+    for ``ckpt.CheckpointManager.save_named`` (the host blob's length
+    varies per snapshot, which the positional checkpoint API's shape
+    check forbids).
+    """
+    version: int
+    step: int
+    dstate: Dict[str, np.ndarray]
+    host_blob: bytes
+
+    def to_arrays(self) -> Dict[str, np.ndarray]:
+        out: Dict[str, np.ndarray] = {
+            "meta": np.asarray([self.version, self.step], np.int64),
+            "host": np.frombuffer(self.host_blob, np.uint8),
+        }
+        for k, v in self.dstate.items():
+            out[f"d.{k}"] = np.asarray(v)
+        return out
+
+    @classmethod
+    def from_arrays(cls, arrays: Dict[str, np.ndarray]
+                    ) -> "EngineSnapshot":
+        meta = np.asarray(arrays["meta"])
+        return cls(
+            version=int(meta[0]), step=int(meta[1]),
+            dstate={k[2:]: np.asarray(v) for k, v in arrays.items()
+                    if k.startswith("d.")},
+            host_blob=np.asarray(arrays["host"]).tobytes())
 
 
 _LEGACY_KWARGS_WARNED = False
@@ -514,6 +581,10 @@ class Engine:
         # spec commit, prefill first-tokens): the metrics logger's
         # per-step tokens delta and the dashboard tokens/s numerator
         self._tokens_emitted = 0
+        # request-lifecycle monotone counters (ISSUE 10): explicit
+        # cancellations and wall-clock deadline expiries
+        self._cancelled = 0
+        self._deadline_expired = 0
         # live metrics stream (serve/metrics.py): fed one host-side
         # event per step; None = zero overhead on the hot path
         self.metrics = config.metrics
@@ -713,6 +784,11 @@ class Engine:
             # the explicit kwargs used to
             _warn_share_kwarg()
         state = RequestState(request=req, arrival=self._step_count)
+        if req.deadline_ms is not None:
+            if req.deadline_ms < 0:
+                raise ValueError(f"deadline_ms must be >= 0, got "
+                                 f"{req.deadline_ms}")
+            state.deadline_at = time.perf_counter() + req.deadline_ms / 1e3
         object.__setattr__(req, "_engine_state", state)
         self._states[req.seq_id] = state
         self.scheduler.add(req, state.arrival)
@@ -1712,6 +1788,13 @@ class Engine:
     def _step_impl(self) -> Dict[int, int]:
         self._step_count += 1
         if self._injector is not None:
+            # crash point "pre": the step boundary BEFORE this step
+            # mutated anything — a scheduled InjectedStepFault simulates
+            # the process dying here; recovery is restore-from-snapshot
+            # (runtime/resilient_serve.py), never unwinding
+            crash = getattr(self._injector, "maybe_crash", None)
+            if crash is not None:
+                crash(self._step_count, "pre")
             # safe point #1: before admission — a forced "pre" preempt
             # tears a victim out between prompt chunks / decode steps
             self._run_forced_preempts(
@@ -1778,6 +1861,9 @@ class Engine:
                 self._run_forced_preempts(
                     self._injector.forced_preempts(self._step_count,
                                                    "post"))
+                crash = getattr(self._injector, "maybe_crash", None)
+                if crash is not None:
+                    crash(self._step_count, "post")
             return {}
         # ---- the step's ONE device->host fetch --------------------------
         host = jax.device_get(fetch)
@@ -1838,6 +1924,12 @@ class Engine:
             # the next dispatch
             self._run_forced_preempts(
                 self._injector.forced_preempts(self._step_count, "post"))
+            # crash point "post": this step's commit is fully applied —
+            # a crash here loses NOTHING the snapshot cadence covers, it
+            # only forces the supervisor to replay from the last snapshot
+            crash = getattr(self._injector, "maybe_crash", None)
+            if crash is not None:
+                crash(self._step_count, "post")
         return out
 
     def _commit_spec(self, live, host, ctx_pre, out) -> None:
@@ -1955,6 +2047,7 @@ class Engine:
         by a finished-but-unreleased sequence (``auto_release=False``),
         so iterating would spin forever.  Release sequences or enable
         ``auto_release``."""
+        self._enforce_deadlines()
         if self.has_unfinished():
             # slot count included: a zero-token finish (capacity stop)
             # that auto-releases its slot IS progress — the freed slot
@@ -1996,6 +2089,76 @@ class Engine:
                     st.finish_reported = True
         return outs
 
+    # -------------------------------------------- cancellation / deadlines
+    def cancel(self, seq_id: int, reason: str = "cancelled") -> bool:
+        """Terminate a request wherever it is in its lifecycle — queued,
+        mid-chunk prefill, decoding, or parked on the host KV tier — and
+        reclaim everything it holds: its sequence slot, KV blocks, prefix
+        cache refcounts and ledger claims (``check_invariants`` stays
+        green afterwards, pinned in tests/test_recovery.py).
+
+        The final ``RequestOutput`` carries ``finished=True`` with
+        ``finish_reason="cancelled"`` (or ``"deadline"`` when invoked by
+        the deadline sweep) and whatever tokens were generated before the
+        cut.  Returns False — touching nothing — when the id is unknown
+        or the request already finished.  The slot is force-released even
+        under ``auto_release=False``: a cancelled request's holder has by
+        definition stopped consuming it."""
+        st = self._states.get(seq_id)
+        if st is None or st.done:
+            return False
+        req = st.request
+        if self._current is not None and self._current.seq_id == seq_id:
+            self._current = None
+        try:
+            # queued (never admitted) or preempted requests sit in the
+            # scheduler queue; live decoders do not
+            self.scheduler.remove(req)
+        except (ValueError, AttributeError):
+            pass
+        # a host-tier copy dies with the cancel: nothing left to resume
+        # (preempt_request already freed the manager/ledger side)
+        self._preempted.pop(seq_id, None)
+        self._pending_samp = [(s, r) for s, r in self._pending_samp
+                              if r.seq_id != seq_id]
+        st.done = True
+        st.finish_reason = reason
+        if reason == "deadline":
+            self._deadline_expired += 1
+        else:
+            self._cancelled += 1
+        # a cancel IS progress for poll()'s no-progress detector: the
+        # freed capacity admits a queued request on the next step
+        self._progress_events += 1
+        if seq_id in self._slot_of:
+            self.release(seq_id)     # frees slot, blocks, pins, ledger
+        else:
+            # queued / preempted: no slot to tear down (preempt already
+            # freed the manager side), only the registry bookkeeping
+            rq = self.requests.pop(seq_id, None)
+            self.finished[seq_id] = rq if rq is not None else req
+            self._prefilling.pop(seq_id, None)
+            self._chain_cache.pop(seq_id, None)
+        if self.metrics is not None:
+            self.metrics.on_finish(seq_id, self._step_count,
+                                   len(st.generated), reason)
+        return True
+
+    def _enforce_deadlines(self) -> None:
+        """Cancel every live request whose wall-clock budget elapsed
+        (``Request.deadline_ms``), with ``finish_reason="deadline"``.
+        Called at the top of ``poll()`` — deadline enforcement rides the
+        serving loop, costing one clock read per poll and nothing when
+        no request carries a deadline."""
+        now = None
+        for sid in [s for s, st in self._states.items()
+                    if not st.done and st.deadline_at is not None]:
+            if now is None:
+                now = time.perf_counter()
+            st = self._states[sid]
+            if st.deadline_at is not None and now >= st.deadline_at:
+                self.cancel(sid, reason="deadline")
+
     # ------------------------------------------------------------ teardown
     def release(self, seq_id: int) -> None:
         self.manager.free_sequence(seq_id)
@@ -2013,6 +2176,146 @@ class Engine:
             self._current = None
         self._prefilling.pop(seq_id, None)
         self._sync_translation()
+
+    # --------------------------------------------------- snapshot / restore
+    _SNAP_FIELDS = (
+        "requests", "finished", "_states", "_current", "_slot_of",
+        "_prefilling", "_pending_samp", "_step_count", "admission_log",
+        "_preempted", "_swap_bytes_out", "_swap_bytes_in",
+        "_progress_events", "_request_preempts", "_request_resumes",
+        "_dropped_preempts", "_dropped_resumes", "_tokens_emitted",
+        "_spec_drafted", "_spec_accepted", "_cancelled",
+        "_deadline_expired", "_chain_cache",
+    )
+
+    def snapshot(self) -> EngineSnapshot:
+        """Capture the COMPLETE serving state as one portable value.
+
+        Device side: every decode-state array except the tar/sf/flex
+        translation mirrors — those are pure functions of the host tables
+        and are rebuilt on restore through the exact
+        ``_sync_translation(full=True)`` path live serving uses, so the
+        snapshot never stores the same truth twice.  One batched
+        ``device_get`` fetches everything (KV pools, ctx_len, recurrent
+        ssm/conv/cross rows, the spec ``hist`` matrix, per-slot sampling
+        params + PRNG keys).
+
+        Host side: ONE ``pickle.dumps`` of the manager (TAR/SF/flex
+        tables, AllocLedger, refcounts), prefix cache (directory + pins
+        — it references the SAME manager object, and pickle's memo
+        preserves that sharing), scheduler queue, request registries and
+        ``RequestState``s (mid-chunk prefill progress, preempted
+        host-tier sequences included), pending sampling scatters and all
+        monotone counters.  Absolute ``deadline_at`` clocks are
+        rebased to REMAINING budget (a monotonic timestamp is
+        meaningless in the restoring process).
+
+        Legal call points are step boundaries only — the same safe
+        points as ``preempt_request`` — which is where
+        ``ResilientServe`` calls it.  The snapshot is a value: it stays
+        valid after the engine advances, and restoring it on a fresh
+        engine of the same config replays bit-identically."""
+        # pending slot migrations must land first so the fetched pool
+        # bytes agree with the manager's (pickled) post-copy slot map
+        self._apply_copies()
+        dstate = {k: np.asarray(v) for k, v in jax.device_get(
+            {k: v for k, v in self.dstate.items()
+             if k not in ("tar", "sf", "flex")}).items()}
+        now = time.perf_counter()
+        deadline_remaining = {
+            sid: st.deadline_at - now
+            for sid, st in self._states.items()
+            if st.deadline_at is not None and not st.done}
+        payload: Dict[str, Any] = {
+            f: getattr(self, f) for f in self._SNAP_FIELDS}
+        payload["manager"] = self.manager
+        payload["prefix_cache"] = self.prefix_cache
+        payload["scheduler"] = self.scheduler
+        payload["_ctx_host"] = self._ctx_host
+        payload["_shard_swap_out"] = self._shard_swap_out
+        payload["_shard_swap_in"] = self._shard_swap_in
+        payload["deadline_remaining"] = deadline_remaining
+        # the scheduler's back-pointer would drag the whole Engine (and
+        # its params) into the blob; strip it around the dump
+        sched = self.scheduler
+        bound = getattr(sched, "_bound_engine", None)
+        if bound is not None:
+            sched._bound_engine = None
+        try:
+            blob = pickle.dumps(payload, pickle.HIGHEST_PROTOCOL)
+        finally:
+            if bound is not None:
+                sched._bound_engine = bound
+        return EngineSnapshot(version=SNAPSHOT_VERSION,
+                              step=self._step_count, dstate=dstate,
+                              host_blob=blob)
+
+    def restore(self, snap: EngineSnapshot) -> None:
+        """Overwrite this engine's serving state with ``snap``'s.
+
+        The engine must have the same configuration the snapshot was
+        taken under (same arch/pool/mesh shapes — the device key set is
+        checked loudly).  Everything live is discarded: requests
+        submitted after the snapshot are gone and must be resubmitted by
+        the caller (``ResilientServe`` journals and replays them).
+        After restore the engine continues bit-identically to the run
+        that took the snapshot — pinned by the crash oracle in
+        tests/test_recovery.py across greedy/sampled × spec on/off ×
+        prefix-cache on/off × (1,2) mesh."""
+        if snap.version != SNAPSHOT_VERSION:
+            raise ValueError(
+                f"snapshot version {snap.version} != engine "
+                f"{SNAPSHOT_VERSION}: cross-version restore unsupported")
+        expect = {k for k in self.dstate if k not in ("tar", "sf", "flex")}
+        got = set(snap.dstate)
+        if got != expect:
+            raise ValueError(
+                "snapshot device state does not match this engine "
+                f"config: missing {sorted(expect - got)}, unexpected "
+                f"{sorted(got - expect)}")
+        host = pickle.loads(snap.host_blob)
+        for f in self._SNAP_FIELDS:
+            setattr(self, f, host[f])
+        self.manager = host["manager"]
+        self.prefix_cache = host["prefix_cache"]
+        if getattr(self.scheduler, "_bound_engine", None) is self:
+            self.scheduler._bound_engine = None
+        self.scheduler = host["scheduler"]
+        try:
+            self.scheduler._bound_engine = self
+        except AttributeError:
+            pass
+        self._ctx_host = np.asarray(host["_ctx_host"], np.int64).copy()
+        self._shard_swap_out = np.asarray(host["_shard_swap_out"],
+                                          np.int64).copy()
+        self._shard_swap_in = np.asarray(host["_shard_swap_in"],
+                                         np.int64).copy()
+        # deadline budgets restart from the remaining time at snapshot:
+        # the crash + restore pause does not count against a request
+        now = time.perf_counter()
+        for sid, rem in host["deadline_remaining"].items():
+            st = self._states.get(sid)
+            if st is not None:
+                st.deadline_at = now + rem
+        # device state: put the fetched arrays back (with the mesh's
+        # shardings when sharded — specs computed from the CURRENT
+        # dstate before overwriting, the key sets are identical)
+        if self.mesh is not None:
+            specs = kv_state_specs(self.dstate, self.spec)
+            for k, v in snap.dstate.items():
+                self.dstate[k] = jax.device_put(
+                    v, NamedSharding(self.mesh, specs[k]))
+        else:
+            for k, v in snap.dstate.items():
+                self.dstate[k] = jnp.asarray(v)
+        # translation mirrors: rebuilt from the restored host tables via
+        # the one true sync path (also clears the manager's dirty set)
+        self._synced_full = False
+        self._sync_translation(full=True)
+        if self.metrics is not None:
+            # the logger differentiates ABSOLUTE counters: rebase its
+            # baseline so the rewind does not produce negative deltas
+            self.metrics.rebase(self._metrics_counters())
 
     def _kv_block_bytes(self) -> int:
         """Device bytes one pool block occupies across both KV pools
@@ -2045,6 +2348,8 @@ class Engine:
             "swap_bytes_in": self._swap_bytes_in,
             "prefix_lookups": int(pc.stats["lookups"]) if pc else 0,
             "prefix_hits": int(pc.stats["hits"]) if pc else 0,
+            "cancelled": self._cancelled,
+            "deadline_expired": self._deadline_expired,
         }
         if self.partition is not None:
             c["shard_swap_bytes_out"] = [int(x)
@@ -2104,6 +2409,12 @@ class Engine:
         # exactly to the global dedup_blocks counter (same attribution
         # invariant as rsw_hits/flex_walks — cross-checked in tests)
         pc = self.prefix_cache
+        # request-lifecycle robustness (ISSUE 10): explicit cancels and
+        # wall-clock deadline expiries (monotone; survive snapshot/restore)
+        s["lifecycle"] = {
+            "cancelled": self._cancelled,
+            "deadline_expired": self._deadline_expired,
+        }
         s["prefix_cache"] = {
             "enabled": pc is not None,
             "lookups": int(pc.stats["lookups"]) if pc else 0,

@@ -22,7 +22,8 @@ Event schema (DESIGN.md §observability):
   (``tokens``, ``rsw_hits``, ``flex_walks``, ``swap_faults``,
   ``spec_drafted``, ``spec_accepted``, ``request_preempts``,
   ``request_resumes``, ``swap_bytes_out``, ``swap_bytes_in``,
-  ``prefix_lookups``, ``prefix_hits``, per-shard
+  ``prefix_lookups``, ``prefix_hits``, ``cancelled``,
+  ``deadline_expired``, per-shard
   ``shard_swap_bytes_out/in`` lists), gauge fields are point-in-time
   (``occupancy``, ``mapped_blocks``, ``pool_blocks``, ``live``,
   ``queued``, ``host_tier_seqs``).
@@ -50,7 +51,7 @@ STEP_COUNTER_KEYS = (
     "tokens", "rsw_hits", "flex_walks", "swap_faults",
     "spec_drafted", "spec_accepted", "request_preempts",
     "request_resumes", "swap_bytes_out", "swap_bytes_in",
-    "prefix_lookups", "prefix_hits",
+    "prefix_lookups", "prefix_hits", "cancelled", "deadline_expired",
 )
 
 
@@ -232,6 +233,23 @@ class MetricsLogger:
         self._pc_hits.push(event["prefix_hits"])
         self._emit(event)
 
+    def rebase(self, counters: Mapping[str, int]) -> None:
+        """Re-anchor the delta baseline at ``counters`` without emitting
+        an event.  ``Engine.restore`` calls this: a snapshot restore
+        REWINDS the engine's absolute counters, and differentiating
+        across the rewind would emit large negative deltas (and corrupt
+        ``totals``, which must agree with ``Engine.stats()`` at every
+        step).  After rebase the next ``on_step`` sees deltas relative
+        to the restored state — the replayed steps are counted again,
+        which is truthful: the engine really did re-execute them."""
+        for k in STEP_COUNTER_KEYS:
+            cur = int(counters.get(k, 0))
+            self._prev[k] = cur
+            self.totals[k] = cur
+        for k, v in counters.items():
+            if k not in STEP_COUNTER_KEYS:
+                self._prev_shard[k] = [int(x) for x in v]
+
     # ----------------------------------------------------------- rollups
     def rolling(self) -> Dict[str, float]:
         """Rolling-window aggregates over the last ``window`` steps:
@@ -270,7 +288,8 @@ class MetricsLogger:
                 f"rsw {r['rsw_hit_rate']:4.0%} | "
                 f"acc {r['acceptance_rate']:4.0%} | "
                 f"pfx {r['prefix_hit_rate']:4.0%} | "
-                f"pre {t['request_preempts']}/{t['request_resumes']}")
+                f"pre {t['request_preempts']}/{t['request_resumes']} | "
+                f"cxl {t['cancelled']}/{t['deadline_expired']}")
 
     # ------------------------------------------------------------ plumbing
     def _emit(self, event: Mapping[str, Any]) -> None:

@@ -59,6 +59,12 @@ class Scheduler(Protocol):
     def pop(self, req) -> None:
         """Remove ``req`` (the one ``select`` returned) from the queue."""
 
+    def remove(self, req) -> None:
+        """Remove ``req`` from ANY queue position (cancellation /
+        deadline expiry — unlike ``pop``, the target need not be the
+        currently selected head).  Raises ``ValueError`` when not
+        queued."""
+
     def pending(self) -> Tuple[object, ...]:
         """Queued requests, best-first is NOT required (introspection)."""
 
@@ -102,6 +108,14 @@ class FIFOScheduler:
     def pop(self, req) -> None:
         assert self._q and self._q[0] is req, "pop != selected head"
         self._q.popleft()
+
+    def remove(self, req) -> None:
+        # deque.remove compares with ==; Request is eq=False so this is
+        # identity matching, same as the scan-based policies below
+        try:
+            self._q.remove(req)
+        except ValueError:
+            raise ValueError("request not queued") from None
 
     def pending(self) -> tuple:
         return tuple(self._q)
@@ -151,6 +165,8 @@ class ShortestPromptFirst:
                 return
         raise ValueError("request not queued")
 
+    remove = pop       # pop already removes from any queue position
+
     def pending(self) -> tuple:
         return tuple(r for _, _, r in self._entries)
 
@@ -197,6 +213,8 @@ class PriorityAgingScheduler:
                 del self._entries[i]
                 return
         raise ValueError("request not queued")
+
+    remove = pop       # pop already removes from any queue position
 
     def victim(self, candidates, now: int):
         """Lowest effective priority loses its blocks first; ties go to

@@ -264,6 +264,8 @@ def test_logger_totals_agree_with_stats_every_step():
             "swap_bytes_in": ov["swap_bytes_in"],
             "prefix_lookups": pc["lookups"],
             "prefix_hits": pc["hits"],
+            "cancelled": st["lifecycle"]["cancelled"],
+            "deadline_expired": st["lifecycle"]["deadline_expired"],
         }
         assert log.totals == expect, f"drift at step {eng.step_count}"
         if not eng.has_unfinished():

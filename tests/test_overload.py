@@ -270,7 +270,7 @@ def test_injector_schedule_validation_and_log():
     assert inj.alloc_unavailable(1, "admit") is False
     assert inj.alloc_unavailable(2, "admit") is True
     assert inj.alloc_unavailable(2, "admit") is False      # fires once
-    assert inj.faults() == {"alloc": 1, "preempt": 0}
+    assert inj.faults() == {"alloc": 1, "preempt": 0, "step": 0}
     assert issubclass(InjectedAllocFault, InjectedFault)
     assert issubclass(InjectedStepFault, InjectedFault)
     assert InjectedAllocFault.kind == "alloc"

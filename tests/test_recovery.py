@@ -1,0 +1,627 @@
+"""Crash-safe serving (ISSUE 10): snapshot/restore, supervisor, lifecycle.
+
+THE differential oracle: a ``ServeFaultInjector``-driven crash at ANY
+step boundary ("pre": before the step mutated anything; "post": after
+its full commit), followed by ``ResilientServe`` restoring the latest
+snapshot and replaying, must produce token streams BIT-IDENTICAL to an
+uncrashed run — across greedy+sampled × spec on/off × prefix-cache
+on/off × chunked prefill × preempt/resume overload × a (1, 2) mesh,
+with ``Engine.check_invariants()`` green after every restore.
+
+Also pinned here:
+
+* snapshot round-trip is bytes-equal through the npz array encoding;
+* restore onto a FRESH engine of the same config replays identically;
+* snapshot while a sequence is parked on the host KV tier;
+* seq_id reuse across a restore;
+* cancel/deadline release every block, pin and ledger claim (zero
+  leaks), and surface ``finish_reason="cancelled"/"deadline"`` through
+  ``RequestOutput``, ``stats()`` and the metrics event stream;
+* ``ckpt.CheckpointManager`` durability: atomic manifest commit and
+  corrupt/truncated-shard fallback to the previous committed step;
+* a hypothesis fuzzer over random crash schedules (PR-6 gating idiom).
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import numpy as np
+import pytest
+
+from repro.ckpt import CheckpointManager
+from repro.configs import ARCHS, reduced
+from repro.models import model_dims, init_params
+from repro.runtime import (InjectedStepFault, ReplayDivergence,
+                           ResilientServe, ServeFaultInjector,
+                           StepWatchdog)
+from repro.serve import (Engine, EngineConfig, EngineSnapshot, Request,
+                         MetricsLogger, MemorySink)
+from repro.serve.metrics import STEP_COUNTER_KEYS
+from repro.serve.sampling import SamplingParams
+
+try:
+    from hypothesis import given, settings, strategies as st, HealthCheck
+    HAVE_HYPOTHESIS = True
+except ImportError:                        # optional dev dependency
+    HAVE_HYPOTHESIS = False
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+_SETUP_CACHE = {}
+
+
+def _setup(arch="granite-8b"):
+    if arch not in _SETUP_CACHE:
+        cfg = dataclasses.replace(reduced(ARCHS[arch]), num_layers=2)
+        dims = model_dims(cfg, tp=1)
+        params = init_params(jax.random.PRNGKey(2), cfg, dims)
+        _SETUP_CACHE[arch] = (cfg, params)
+    return _SETUP_CACHE[arch]
+
+
+SAMPLED = SamplingParams(temperature=0.8, top_p=0.9, seed=11)
+
+# the oracle matrix: greedy+sampled × spec on/off × prefix-cache on/off
+# (collapsed to the four informative corners — spec and the prefix cache
+# are both exercised against both sampling modes via these)
+VARIANTS = {
+    "greedy": (SamplingParams(), {}),
+    "sampled": (SAMPLED, {}),
+    "spec_greedy": (SamplingParams(), {"spec_decode": "ngram",
+                                       "num_draft_tokens": 3}),
+    "prefix_sampled": (SAMPLED, {"prefix_cache": True}),
+}
+
+
+def _mkeng(cfg, params, injector=None, **ekw):
+    bs = cfg.kv_block_size
+    kw = dict(max_batch=4, max_seq_len=8 * bs, auto_release=True,
+              prefill_budget=bs,      # chunked prefill: every prompt
+                                      # crosses multiple step boundaries
+              fault_injector=injector)
+    kw.update(ekw)
+    return Engine(cfg, params, EngineConfig(**kw))
+
+
+def _reqs(cfg, sampling, n=4, max_new=8, shared_prefix=False):
+    bs = cfg.kv_block_size
+    rng = np.random.RandomState(7)
+    prefix = rng.randint(0, cfg.vocab_size, bs)
+    out = []
+    for i in range(n):
+        tail = rng.randint(0, cfg.vocab_size, bs)
+        prompt = (np.concatenate([prefix, tail]) if shared_prefix
+                  else rng.randint(0, cfg.vocab_size, 2 * bs))
+        out.append(Request(seq_id=i, prompt=prompt, max_new_tokens=max_new,
+                           sampling=sampling))
+    return out
+
+
+def _drain(poller, has_unfinished, outs=None, max_steps=900):
+    outs = {} if outs is None else outs
+    for _ in range(max_steps):
+        for ro in poller():
+            outs.setdefault(ro.seq_id, []).extend(ro.new_token_ids)
+        if not has_unfinished():
+            return outs
+    raise AssertionError("failed to drain")
+
+
+def _reference(cfg, params, sampling, ekw, *, shared_prefix=False,
+               n=4, max_new=8):
+    """Uncrashed run: streams + the step count (the crash-step domain)."""
+    eng = _mkeng(cfg, params, **ekw)
+    for r in _reqs(cfg, sampling, n=n, max_new=max_new,
+                   shared_prefix=shared_prefix):
+        eng.submit(r)
+    outs = _drain(eng.poll, eng.has_unfinished)
+    return outs, eng._step_count
+
+
+def _crashed_run(cfg, params, sampling, ekw, crash_at, *,
+                 snapshot_every=5, shared_prefix=False, n=4, max_new=8,
+                 max_restarts=None, injector_kw=None):
+    inj = ServeFaultInjector(crash_at=crash_at, **(injector_kw or {}))
+    eng = _mkeng(cfg, params, injector=inj, **ekw)
+    sup = ResilientServe(eng, snapshot_every=snapshot_every,
+                         max_restarts=(max_restarts if max_restarts
+                                       is not None else len(crash_at) + 1))
+    for r in _reqs(cfg, sampling, n=n, max_new=max_new,
+                   shared_prefix=shared_prefix):
+        sup.submit(r)
+    outs = _drain(sup.poll, sup.has_unfinished)
+    eng.check_invariants()
+    return outs, sup
+
+
+# ------------------------------------------------- THE crash oracle
+
+@pytest.mark.parametrize("variant", sorted(VARIANTS))
+def test_crash_at_every_step_boundary_bit_identical(variant):
+    """Crash at EVERY boundary of the run (phases alternating pre/post
+    so both legal crash points are swept), restore, replay: the
+    externally observed streams equal the uncrashed run's exactly."""
+    cfg, params = _setup()
+    sampling, ekw = VARIANTS[variant]
+    shared = "prefix" in variant
+    ref, total = _reference(cfg, params, sampling, ekw,
+                            shared_prefix=shared)
+    assert total >= 8, "reference run too short to sweep boundaries"
+    for s in range(1, total + 1):
+        phase = "pre" if s % 2 else "post"
+        outs, sup = _crashed_run(cfg, params, sampling, ekw,
+                                 [(s, phase)], shared_prefix=shared)
+        assert outs == ref, (
+            f"[{variant}] crash at step {s} ({phase}) diverged")
+        assert sup.restarts == 1
+
+
+def test_crash_under_preempt_resume_overload():
+    """Crashes landing mid-preempt/resume traffic (tight pool + forced
+    preemptions) still replay bit-identically, and the host-tier
+    sequences inside the snapshot survive the round-trip."""
+    cfg, params = _setup()
+    ekw = dict(pool_headroom=0.40, max_batch=4)
+    ref, total = _reference(cfg, params, SamplingParams(), ekw,
+                            n=6, max_new=10)
+    forced = [(4, "post", "auto"), (6, "pre", "auto")]
+    for s in (5, 7, max(8, total - 2)):
+        for phase in ("pre", "post"):
+            outs, sup = _crashed_run(
+                cfg, params, SamplingParams(), ekw, [(s, phase)],
+                n=6, max_new=10, snapshot_every=3,
+                injector_kw={"preempt_at": list(forced)})
+            assert outs == ref, f"overload crash at {s}/{phase} diverged"
+
+
+def test_multi_crash_and_restart_budget():
+    cfg, params = _setup()
+    ref, total = _reference(cfg, params, SamplingParams(), {})
+    crash = [(3, "pre"), (6, "post"), (9, "pre")]
+    outs, sup = _crashed_run(cfg, params, SamplingParams(), {}, crash,
+                             snapshot_every=4)
+    assert outs == ref
+    assert sup.restarts == 3
+    assert sup.stats()["recovery"]["replayed_steps"] > 0
+    # budget exhausted: the fault escapes instead of spinning
+    with pytest.raises(InjectedStepFault):
+        _crashed_run(cfg, params, SamplingParams(), {}, crash,
+                     snapshot_every=4, max_restarts=2)
+
+
+# ------------------------------------------------- snapshot round-trip
+
+def test_snapshot_roundtrip_bytes_equal():
+    """snapshot → to_arrays → from_arrays reproduces the snapshot
+    exactly, and restoring it leaves the engine in a state whose OWN
+    snapshot has byte-identical device arrays and an equal host blob."""
+    cfg, params = _setup()
+    eng = _mkeng(cfg, params)
+    for r in _reqs(cfg, SamplingParams()):
+        eng.submit(r)
+    for _ in range(5):
+        eng.poll()
+    snap = eng.snapshot()
+    rt = EngineSnapshot.from_arrays(snap.to_arrays())
+    assert rt.version == snap.version and rt.step == snap.step
+    assert rt.host_blob == snap.host_blob
+    assert set(rt.dstate) == set(snap.dstate)
+    for k in snap.dstate:
+        assert np.array_equal(rt.dstate[k], snap.dstate[k]), k
+    fresh = _mkeng(cfg, params)
+    fresh.restore(rt)
+    fresh.check_invariants()
+    again = fresh.snapshot()
+    assert again.step == snap.step
+    for k in snap.dstate:
+        assert np.array_equal(again.dstate[k], snap.dstate[k]), (
+            f"device array {k} changed across restore")
+
+
+def test_restore_fresh_engine_replays_identically():
+    cfg, params = _setup()
+    ref, _ = _reference(cfg, params, SAMPLED, {})
+    eng = _mkeng(cfg, params)
+    for r in _reqs(cfg, SAMPLED):
+        eng.submit(r)
+    outs = {}
+    for _ in range(6):
+        for ro in eng.poll():
+            outs.setdefault(ro.seq_id, []).extend(ro.new_token_ids)
+    snap = eng.snapshot()
+    fresh = _mkeng(cfg, params)
+    fresh.restore(snap)
+    fresh.check_invariants()
+    _drain(fresh.poll, fresh.has_unfinished, outs)
+    assert outs == ref
+
+
+def test_snapshot_while_preempted():
+    """A sequence parked on the host KV tier rides the snapshot: after
+    restore it resumes and finishes with the uncontended stream."""
+    cfg, params = _setup()
+    ref, _ = _reference(cfg, params, SamplingParams(), {})
+    inj = ServeFaultInjector(preempt_at=[(3, "post", "auto")])
+    eng = _mkeng(cfg, params, injector=inj)
+    for r in _reqs(cfg, SamplingParams()):
+        eng.submit(r)
+    outs = {}
+    for _ in range(4):
+        for ro in eng.poll():
+            outs.setdefault(ro.seq_id, []).extend(ro.new_token_ids)
+    assert eng._preempted, "forced preempt did not land"
+    snap = eng.snapshot()
+    fresh = _mkeng(cfg, params)
+    fresh.restore(snap)
+    assert fresh._preempted.keys() == eng._preempted.keys()
+    fresh.check_invariants()
+    _drain(fresh.poll, fresh.has_unfinished, outs)
+    assert outs == ref
+
+
+def test_seq_id_reuse_across_restore():
+    cfg, params = _setup()
+    eng = _mkeng(cfg, params)
+    reqs = _reqs(cfg, SamplingParams(), n=2, max_new=4)
+    for r in reqs:
+        eng.submit(r)
+    _drain(eng.poll, eng.has_unfinished)
+    snap = eng.snapshot()
+    fresh = _mkeng(cfg, params)
+    fresh.restore(snap)
+    # both ids finished inside the snapshot: reusing them must work
+    rng = np.random.RandomState(3)
+    bs = cfg.kv_block_size
+    for i in range(2):
+        fresh.submit(Request(
+            seq_id=i, prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+            max_new_tokens=4, sampling=SamplingParams()))
+    outs = _drain(fresh.poll, fresh.has_unfinished)
+    assert set(outs) == {0, 1}
+    fresh.check_invariants()
+
+
+def test_restore_rejects_mismatched_config():
+    cfg, params = _setup()
+    eng = _mkeng(cfg, params)
+    snap = eng.snapshot()
+    other = _mkeng(cfg, params, spec_decode="ngram", num_draft_tokens=2)
+    with pytest.raises(ValueError, match="does not match"):
+        other.restore(snap)      # snapshot lacks the spec 'hist' array
+    bad = dataclasses.replace(snap, version=snap.version + 1)
+    with pytest.raises(ValueError, match="version"):
+        eng.restore(bad)
+
+
+# ------------------------------------------------- cancel / deadline
+
+def test_cancel_releases_everything():
+    """Cancel in every lifecycle stage — queued, live, preempted — then
+    drain: no leaked blocks, pins or ledger claims."""
+    cfg, params = _setup()
+    inj = ServeFaultInjector(preempt_at=[(3, "post", "auto")])
+    eng = _mkeng(cfg, params, injector=inj, prefix_cache=False)
+    for r in _reqs(cfg, SamplingParams(), n=6, max_new=10):
+        eng.submit(r)
+    for _ in range(4):
+        eng.poll()
+    assert eng._preempted, "forced preempt did not land"
+    parked = next(iter(eng._preempted))
+    live = next(sid for sid in eng.requests
+                if not eng._states[sid].done and sid != parked)
+    queued = [r.seq_id for r in eng.waiting
+              if r.seq_id not in eng._prefilling
+              and r.seq_id != parked]
+    assert eng.cancel(parked) and eng.cancel(live)
+    if queued:
+        assert eng.cancel(queued[-1])
+    eng.check_invariants()
+    assert eng.cancel(live) is False            # idempotent
+    for sid in (parked, live):
+        assert eng._states[sid].finish_reason == "cancelled"
+        assert sid not in eng._slot_of and sid not in eng._preempted
+    _drain(eng.poll, eng.has_unfinished)
+    eng.check_invariants()
+    # zero leaks: every sequence gone from the manager, no refcounts
+    assert not eng.manager.blocks, "leaked KV blocks after cancel"
+    assert not any(eng.manager.slot_refcount.values()), "leaked refcounts"
+    assert not eng.manager.seq_lengths, "leaked sequence slots"
+    n = 2 + (1 if queued else 0)
+    assert eng.stats()["lifecycle"]["cancelled"] == n
+
+
+def test_cancelled_outputs_and_metrics_events():
+    cfg, params = _setup()
+    sink = MemorySink()
+    eng = _mkeng(cfg, params, metrics=MetricsLogger([sink]))
+    for r in _reqs(cfg, SamplingParams(), n=3, max_new=12):
+        eng.submit(r)
+    for _ in range(3):
+        eng.poll()
+    assert eng.cancel(1)
+    outs = {}
+    reasons = {}
+    for _ in range(200):
+        for ro in eng.poll():
+            outs.setdefault(ro.seq_id, []).extend(ro.new_token_ids)
+            if ro.finished:
+                reasons[ro.seq_id] = ro.finish_reason
+        if not eng.has_unfinished():
+            break
+    assert reasons[1] == "cancelled"
+    fin = [e for e in sink.events if e["kind"] == "finish"]
+    assert any(e["seq_id"] == 1 and e["finish_reason"] == "cancelled"
+               for e in fin)
+    tot = eng.metrics.totals
+    assert tot["cancelled"] == 1 and tot["deadline_expired"] == 0
+
+
+def test_deadline_expiry():
+    cfg, params = _setup()
+    bs = cfg.kv_block_size
+    eng = _mkeng(cfg, params)
+    rng = np.random.RandomState(5)
+    eng.submit(Request(seq_id=0,
+                       prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                       max_new_tokens=12, sampling=SamplingParams(),
+                       deadline_ms=0.0))       # expires immediately
+    eng.submit(Request(seq_id=1,
+                       prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                       max_new_tokens=6, sampling=SamplingParams()))
+    outs = _drain(eng.poll, eng.has_unfinished)
+    assert eng._states[0].finish_reason == "deadline"
+    assert eng._states[1].finish_reason in ("stop", "length")
+    assert len(outs.get(1, [])) > 0
+    assert eng.stats()["lifecycle"]["deadline_expired"] == 1
+    eng.check_invariants()
+    with pytest.raises(ValueError, match="deadline_ms"):
+        eng.submit(Request(seq_id=2,
+                           prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                           max_new_tokens=4, sampling=SamplingParams(),
+                           deadline_ms=-1.0))
+
+
+def test_deadline_rebases_across_restore():
+    """The remaining budget — not the absolute clock — rides the
+    snapshot: a generous deadline survives restore into a new engine."""
+    cfg, params = _setup()
+    bs = cfg.kv_block_size
+    eng = _mkeng(cfg, params)
+    rng = np.random.RandomState(5)
+    eng.submit(Request(seq_id=0,
+                       prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                       max_new_tokens=6, sampling=SamplingParams(),
+                       deadline_ms=600000.0))
+    eng.poll()
+    snap = eng.snapshot()
+    fresh = _mkeng(cfg, params)
+    fresh.restore(snap)
+    st = fresh._states[0]
+    assert st.deadline_at is not None
+    import time as _t
+    remaining = st.deadline_at - _t.perf_counter()
+    assert 0 < remaining <= 600.0
+    outs = _drain(fresh.poll, fresh.has_unfinished)
+    assert fresh._states[0].finish_reason in ("stop", "length")
+
+
+# ------------------------------------------------- metrics across restore
+
+def test_metrics_rebase_no_negative_deltas():
+    cfg, params = _setup()
+    sink = MemorySink()
+    eng = _mkeng(cfg, params, metrics=MetricsLogger([sink]))
+    sup = ResilientServe(eng, snapshot_every=3, max_restarts=3)
+    inj = ServeFaultInjector(crash_at=[(5, "post")])
+    eng._injector = inj
+    for r in _reqs(cfg, SamplingParams()):
+        sup.submit(r)
+    _drain(sup.poll, sup.has_unfinished)
+    steps = [e for e in sink.events if e["kind"] == "step"]
+    assert steps, "no step events"
+    for e in steps:
+        for k in STEP_COUNTER_KEYS:
+            assert e[k] >= 0, (
+                f"negative delta {k}={e[k]} at step {e['step']}: the "
+                "restore rewound counters without a rebase")
+    assert eng.metrics.totals["tokens"] == eng._tokens_emitted
+
+
+# ------------------------------------------------- checkpoint durability
+
+def test_ckpt_atomic_manifest_and_commit(tmp_path):
+    ck = CheckpointManager(str(tmp_path), keep_last=2)
+    state = {"w": np.arange(6, dtype=np.float32)}
+    ck.save(3, state, blocking=True)
+    step_dir = tmp_path / "step_3"
+    assert (step_dir / "COMMIT").exists()
+    assert not list(tmp_path.glob(".tmp_step_*")), "temp dir leaked"
+    assert not list(step_dir.glob("*.tmp")), "non-atomic marker write"
+    restored, step = ck.restore(state)
+    assert step == 3 and np.array_equal(restored["w"], state["w"])
+
+
+def test_ckpt_corrupt_shard_falls_back(tmp_path):
+    ck = CheckpointManager(str(tmp_path), keep_last=5)
+    state = {"w": np.arange(4, dtype=np.float32)}
+    ck.save(1, state, blocking=True)
+    state2 = {"w": np.arange(4, dtype=np.float32) * 2}
+    ck.save(2, state2, blocking=True)
+    # truncate the latest shard UNDER its COMMIT marker (torn write)
+    shard = tmp_path / "step_2" / "shard_0.npz"
+    shard.write_bytes(shard.read_bytes()[:20])
+    with pytest.warns(UserWarning, match="corrupt or truncated"):
+        restored, step = ck.restore(state)
+    assert step == 1 and np.array_equal(restored["w"], state["w"])
+    # every step corrupt -> loud failure, not silence
+    (tmp_path / "step_1" / "shard_0.npz").write_bytes(b"junk")
+    with pytest.warns(UserWarning):
+        with pytest.raises(FileNotFoundError, match="corrupt"):
+            ck.restore(state)
+
+
+def test_ckpt_save_named_variable_shapes(tmp_path):
+    """Named checkpoints carry shape-changing entries between steps —
+    the engine's pickled host blob grows/shrinks — which the positional
+    API's shape check forbids."""
+    ck = CheckpointManager(str(tmp_path), keep_last=3)
+    ck.save_named(1, {"host": np.frombuffer(b"abc", np.uint8),
+                      "meta": np.asarray([1, 1])}, blocking=True)
+    ck.save_named(2, {"host": np.frombuffer(b"abcdef", np.uint8),
+                      "meta": np.asarray([1, 2])}, blocking=True)
+    arrays, step = ck.restore_named()
+    assert step == 2 and arrays["host"].tobytes() == b"abcdef"
+    arrays, step = ck.restore_named(step=1)
+    assert step == 1 and arrays["host"].tobytes() == b"abc"
+
+
+def test_persisted_snapshot_resume_with_corruption(tmp_path):
+    """Kill-and-recover across processes WITH a torn latest snapshot:
+    ``from_checkpoint`` skips the corrupt step (warning) and resumes
+    from the previous one; the resumed tail matches the reference."""
+    cfg, params = _setup()
+    ck = CheckpointManager(str(tmp_path), keep_last=10)
+    ref, _ = _reference(cfg, params, SamplingParams(), {})
+    eng = _mkeng(cfg, params)
+    sup = ResilientServe(eng, ck, snapshot_every=3)
+    for r in _reqs(cfg, SamplingParams()):
+        sup.submit(r)
+    for _ in range(8):
+        sup.poll()
+    ck.wait()
+    steps = ck.all_steps()
+    assert len(steps) >= 2, "cadence produced too few snapshots"
+    shard = tmp_path / f"step_{steps[-1]}" / "shard_0.npz"
+    shard.write_bytes(shard.read_bytes()[:50])
+    fresh = _mkeng(cfg, params)
+    with pytest.warns(UserWarning, match="corrupt or truncated"):
+        sup2 = ResilientServe.from_checkpoint(fresh, ck)
+    fresh.check_invariants()
+    tail = _drain(sup2.poll, sup2.has_unfinished)
+    ck.wait()
+    for sid, toks in tail.items():
+        assert ref[sid][-len(toks):] == toks, f"resumed tail diverges {sid}"
+
+
+# ------------------------------------------------- watchdog
+
+def test_step_watchdog_flags_hung_steps():
+    wd = StepWatchdog(threshold=5.0, warmup=3)
+    for _ in range(6):
+        assert wd.record(0.01) is False
+    assert wd.record(0.5) is True
+    assert len(wd.flags) == 1
+    sup_like = wd.record(0.011)
+    assert sup_like is False, "EMA poisoned by the outlier spike"
+
+
+# ------------------------------------------------- (1, 2) mesh restore
+
+def _run(script: str) -> None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", script], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0 and "ALL_OK" in out.stdout, (
+        out.stdout[-2000:], out.stderr[-4000:])
+
+
+_PRELUDE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import dataclasses
+    import numpy as np, jax
+    from repro.configs import ARCHS, reduced
+    from repro.models import model_dims, init_params
+    from repro.runtime import ResilientServe, ServeFaultInjector
+    from repro.serve import Engine, EngineConfig, Request
+    from repro.serve.sampling import SamplingParams
+    cfg = dataclasses.replace(reduced(ARCHS["granite-8b"]), num_layers=2)
+    dims = model_dims(cfg, tp=1)
+    params = init_params(jax.random.PRNGKey(2), cfg, dims)
+    bs = cfg.kv_block_size
+""")
+
+
+def test_mesh_crash_restore_bit_identical():
+    """(1, 2) mesh: crash + restore replays bit-identically (restore
+    re-places every device array with the mesh shardings and rebuilds
+    the padded translation mirrors), and a snapshot taken on the mesh
+    restores onto a FRESH mesh engine."""
+    _run(_PRELUDE + textwrap.dedent("""
+        def mkeng(injector=None):
+            return Engine(cfg, params, EngineConfig(
+                max_batch=4, max_seq_len=8 * bs, auto_release=True,
+                prefill_budget=bs, mesh_shape=(1, 2),
+                fault_injector=injector))
+        def reqs():
+            rng = np.random.RandomState(7)
+            return [Request(seq_id=i,
+                            prompt=rng.randint(0, cfg.vocab_size, 2 * bs),
+                            max_new_tokens=8, sampling=SamplingParams())
+                    for i in range(4)]
+        def drain(poller, unfinished, outs):
+            for _ in range(500):
+                for ro in poller():
+                    outs.setdefault(ro.seq_id, []).extend(ro.new_token_ids)
+                if not unfinished():
+                    return outs
+            raise AssertionError("no drain")
+        ref_eng = mkeng()
+        for r in reqs(): ref_eng.submit(r)
+        ref = drain(ref_eng.poll, ref_eng.has_unfinished, {})
+        total = ref_eng._step_count
+        for s in (2, total // 2, total - 1):
+            for phase in ("pre", "post"):
+                inj = ServeFaultInjector(crash_at=[(s, phase)])
+                eng = mkeng(inj)
+                sup = ResilientServe(eng, snapshot_every=4,
+                                     max_restarts=2)
+                for r in reqs(): sup.submit(r)
+                outs = drain(sup.poll, sup.has_unfinished, {})
+                assert outs == ref, f"mesh crash {s}/{phase} diverged"
+                eng.check_invariants()
+        # snapshot -> fresh mesh engine restore
+        eng = mkeng()
+        for r in reqs(): eng.submit(r)
+        outs = {}
+        for _ in range(5):
+            for ro in eng.poll():
+                outs.setdefault(ro.seq_id, []).extend(ro.new_token_ids)
+        snap = eng.snapshot()
+        fresh = mkeng()
+        fresh.restore(snap)
+        fresh.check_invariants()
+        drain(fresh.poll, fresh.has_unfinished, outs)
+        assert outs == ref, "fresh mesh restore diverged"
+        print("ALL_OK")
+    """))
+
+
+# ------------------------------------------------- hypothesis fuzzer
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=5, deadline=None,
+              suppress_health_check=[HealthCheck.too_slow])
+    @given(crashes=st.lists(
+               st.tuples(st.integers(min_value=1, max_value=24),
+                         st.sampled_from(["pre", "post"])),
+               min_size=1, max_size=3, unique=True),
+           every=st.integers(min_value=2, max_value=8))
+    def test_fuzz_crash_schedules_bit_identical(crashes, every):
+        """Any crash schedule × any snapshot cadence: the supervised
+        stream equals the uncrashed reference."""
+        cfg, params = _setup()
+        key = ("fuzz_ref",)
+        if key not in _SETUP_CACHE:
+            _SETUP_CACHE[key] = _reference(cfg, params, SamplingParams(),
+                                           {})
+        ref, _total = _SETUP_CACHE[key]
+        outs, sup = _crashed_run(cfg, params, SamplingParams(), {},
+                                 crashes, snapshot_every=every,
+                                 max_restarts=len(crashes) + 1)
+        assert outs == ref
